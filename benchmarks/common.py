@@ -1,0 +1,96 @@
+"""Shared benchmark harness: matrix suite, timing, CSV output.
+
+The paper evaluates 515 matrices (500 SuiteSparse + 15 GNN graphs).  Offline
+we regenerate a *structurally representative* suite: every Table-4 graph
+preset (scaled) plus SuiteSparse-like synthetic matrices in both density
+regimes.  ``--scale`` trades fidelity for runtime; all benchmarks write
+CSV artifacts under experiments/bench/.
+
+CPU timing note: this container executes XLA on one CPU core, so absolute
+GFLOPS are not TPU numbers.  Structural metrics (MMA counts, bytes, memory
+footprints) are exact; timed comparisons are *relative* between execution
+paths lowered through the same backend.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Callable, Dict, Iterable, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.sparse.graphs import (
+    DATASET_PRESETS,
+    GraphData,
+    erdos_renyi_graph,
+    make_dataset,
+    power_law_graph,
+)
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+# Table-4 graph presets benchmarked at this scale by default
+GRAPH_SUITE = ["GitHub", "Artist", "Ell", "DD", "Comamazon", "Amazon0505"]
+# SuiteSparse-style synthetic matrices: (name, nodes, avg_deg, kind)
+SYNTH_SUITE = [
+    ("ss-pl-5k-8", 5_000, 8.0, "power_law"),
+    ("ss-pl-20k-16", 20_000, 16.0, "power_law"),
+    ("ss-pl-50k-32", 50_000, 32.0, "power_law"),
+    ("ss-un-10k-4", 10_000, 4.0, "uniform"),
+    ("ss-un-40k-12", 40_000, 12.0, "uniform"),
+]
+
+
+def suite(scale: float = 0.02, seed: int = 0) -> List[GraphData]:
+    """The benchmark matrix suite (scaled paper presets + synthetics).
+
+    Synthetic sizes are calibrated at scale=0.02 and shrink/grow with
+    ``scale`` like the graph presets do (keeps interpret-mode kernel
+    benchmarks tractable at small scales).
+    """
+    graphs = [make_dataset(n, scale=scale, seed=seed) for n in GRAPH_SUITE]
+    factor = scale / 0.02
+    for name, nodes, deg, kind in SYNTH_SUITE:
+        n_eff = max(int(nodes * factor), 64)
+        gen = power_law_graph if kind == "power_law" else erdos_renyi_graph
+        rows, cols = gen(n_eff, deg, seed=seed)
+        vals = np.ones_like(rows, np.float32)
+        graphs.append(GraphData(name=name, num_nodes=n_eff, rows=rows,
+                                cols=cols, vals=vals))
+    return graphs
+
+
+def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall ms of ``fn(*args)`` with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(times))
+
+
+def write_csv(name: str, rows: Sequence[Dict], out_dir: str = OUT_DIR) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, name)
+    if not rows:
+        return path
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+def geomean(xs: Iterable[float]) -> float:
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return 0.0
+    return float(np.exp(np.mean(np.log(xs))))

@@ -1,0 +1,71 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced scale
+  PYTHONPATH=src python -m benchmarks.run --only fig1,table7
+
+Artifacts land in experiments/bench/*.csv; the summary block printed at
+the end is the cross-check against the paper's headline numbers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+BENCHES = {
+    "fig1": ("mma_counts", "Fig. 1 — MMA invocations 16x1 vs 8x1"),
+    "table2": ("zeros_in_vectors", "Table 2 — zeros in nonzero vectors"),
+    "fig11": ("spmm_bench", "Fig. 11/Table 5 — SpMM throughput"),
+    "fig12": ("data_access", "Fig. 12 — data access cost"),
+    "fig13": ("sddmm_bench", "Fig. 13/Table 6 — SDDMM throughput"),
+    "fig14": ("ablation_vector_size", "Fig. 14 — vector-size ablation"),
+    "fig15": ("ablation_coalescing", "Fig. 15 — coalescing ablation"),
+    "table7": ("format_memory", "Table 7 — ME-BCRS memory footprint"),
+    "fig16": ("gnn_e2e", "Fig. 16/Table 8 — end-to-end GNN"),
+}
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", default=None,
+                   help="comma-separated subset of: " + ",".join(BENCHES))
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--scale", type=float, default=None)
+    args = p.parse_args(argv)
+
+    selected = list(BENCHES) if not args.only else args.only.split(",")
+    scale = args.scale or (0.005 if args.quick else 0.02)
+
+    summary = {}
+    t_start = time.time()
+    for key in selected:
+        mod_name, title = BENCHES[key]
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        print(f"\n=== {title} ===")
+        t0 = time.time()
+        kwargs = {"scale": scale}
+        if key == "fig14":
+            kwargs["scale"] = min(scale, 0.01)
+        if key == "fig16":
+            kwargs["scale"] = min(scale, 0.01)
+        if key == "fig15":
+            # interpret-mode Pallas executes the kernel body in Python —
+            # the non-coalesced ablation's grid is one step per vector
+            kwargs["scale"] = min(scale, 0.002)
+        out = mod.run(**kwargs)
+        out.pop("rows", None)
+        summary[key] = {**out, "seconds": round(time.time() - t0, 1)}
+
+    print(f"\n=== summary ({time.time() - t_start:.0f}s) ===")
+    print(json.dumps(summary, indent=2, default=str))
+    os.makedirs("experiments/bench", exist_ok=True)
+    with open("experiments/bench/summary.json", "w") as f:
+        json.dump(summary, f, indent=2, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

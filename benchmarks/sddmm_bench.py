@@ -1,0 +1,64 @@
+"""Paper Fig. 13 / Table 6: SDDMM throughput across execution paths.
+
+Paths: coo edge-wise (CUDA-core-class), blocked 16×1 (TC-GNN-class),
+blocked 8×1 (FlashSparse), optional Pallas kernel.  N ∈ {32, 128} per the
+paper.  GFLOPS = 2·nnz·N / time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import block_format, from_coo, sddmm_blocked, sddmm_coo
+
+from .common import geomean, suite, time_fn, write_csv
+
+
+def run(scale: float = 0.02, n_values=(32, 128), include_pallas: bool = False,
+        verbose: bool = True):
+    rows = []
+    for g in suite(scale):
+        shape = (g.num_nodes, g.num_nodes)
+        nnz = g.num_edges
+        b8 = block_format(from_coo(g.rows, g.cols, g.vals, shape, 8), 8)
+        b16 = block_format(from_coo(g.rows, g.cols, g.vals, shape, 16), 8)
+        rows_d = jnp.asarray(g.rows)
+        cols_d = jnp.asarray(g.cols)
+        rng = np.random.default_rng(0)
+        for n in n_values:
+            q = jnp.asarray(rng.standard_normal((g.num_nodes, n)).astype(np.float32))
+            k = jnp.asarray(rng.standard_normal((g.num_nodes, n)).astype(np.float32))
+            flops = 2.0 * nnz * n
+            t_coo = time_fn(lambda: sddmm_coo(rows_d, cols_d, q, k))
+            t8 = time_fn(lambda: sddmm_blocked(b8, q, k))
+            t16 = time_fn(lambda: sddmm_blocked(b16, q, k))
+            entry = {
+                "matrix": g.name, "nnz": nnz, "N": n,
+                "gflops_coo": flops / t_coo / 1e6,
+                "gflops_blocked8": flops / t8 / 1e6,
+                "gflops_blocked16": flops / t16 / 1e6,
+                "speedup_8_vs_coo": t_coo / t8,
+                "speedup_8_vs_16": t16 / t8,
+            }
+            if include_pallas:
+                from repro.kernels import ops
+                t_pl = time_fn(lambda: ops.sddmm(b8, q, k))
+                entry["gflops_pallas8"] = flops / t_pl / 1e6
+            rows.append(entry)
+            if verbose:
+                print(f"  {g.name:16s} N={n:3d} "
+                      f"coo {entry['gflops_coo']:7.2f} | "
+                      f"16x1 {entry['gflops_blocked16']:7.2f} | "
+                      f"8x1 {entry['gflops_blocked8']:7.2f} GFLOPS | "
+                      f"8v16 {entry['speedup_8_vs_16']:.2f}x")
+    gm = geomean([r["speedup_8_vs_16"] for r in rows])
+    gm_coo = geomean([r["speedup_8_vs_coo"] for r in rows])
+    if verbose:
+        print(f"  geomean speedup 8x1 vs 16x1: {gm:.2f}x | vs coo: {gm_coo:.2f}x")
+    write_csv("fig13_sddmm.csv", rows)
+    return {"geomean_8_vs_16": gm, "geomean_8_vs_coo": gm_coo, "rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Paper Fig. 11 / Table 5: SpMM throughput across execution paths.
+
+Baseline classes mapped to this framework (DESIGN.md §8):
+  dense-XLA         cuSPARSE-class dense baseline (XLA dot on the dense A)
+  coo-segment       CUDA-core-class (Sputnik/RoDe data flow: edge scatter)
+  blocked-16x1      DTC-SpMM/TC-GNN-class (same pipeline, V=16 vectors)
+  blocked-8x1       FlashSparse (swap-and-transpose V=8), XLA path
+  pallas-8x1        FlashSparse Pallas kernel (interpret mode on CPU)
+
+N ∈ {128, 256} per the paper.  GFLOPS = 2·nnz·N / time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import block_format, from_coo, spmm_blocked, spmm_coo_segment
+from repro.core.spmm import spmm_dense_ref
+
+from .common import geomean, suite, time_fn, write_csv
+
+
+def run(scale: float = 0.02, n_values=(128, 256), include_pallas: bool = False,
+        verbose: bool = True):
+    rows = []
+    for g in suite(scale):
+        shape = (g.num_nodes, g.num_nodes)
+        nnz = g.num_edges
+        f8 = from_coo(g.rows, g.cols, g.vals, shape, vector_size=8)
+        f16 = from_coo(g.rows, g.cols, g.vals, shape, vector_size=16)
+        b8 = block_format(f8, k_blk=8)
+        b16 = block_format(f16, k_blk=8)
+        rows_d = jnp.asarray(g.rows)
+        cols_d = jnp.asarray(g.cols)
+        vals_d = jnp.asarray(g.vals)
+
+        dense_a = None
+        if g.num_nodes <= 60_000:
+            dense_a = jnp.asarray(
+                np.zeros(shape, np.float32)) if False else None
+        for n in n_values:
+            b = jnp.asarray(
+                np.random.default_rng(0).standard_normal(
+                    (g.num_nodes, n)).astype(np.float32))
+            flops = 2.0 * nnz * n
+
+            t_coo = time_fn(lambda: spmm_coo_segment(
+                rows_d, cols_d, vals_d, b, num_rows=g.num_nodes))
+            t8 = time_fn(lambda: spmm_blocked(b8, b))
+            t16 = time_fn(lambda: spmm_blocked(b16, b))
+            entry = {
+                "matrix": g.name, "nnz": nnz, "N": n,
+                "gflops_coo": flops / t_coo / 1e6,
+                "gflops_blocked8": flops / t8 / 1e6,
+                "gflops_blocked16": flops / t16 / 1e6,
+                "speedup_8_vs_coo": t_coo / t8,
+                "speedup_8_vs_16": t16 / t8,
+            }
+            if include_pallas:
+                from repro.kernels import ops
+                t_pl = time_fn(lambda: ops.spmm(b8, b))
+                entry["gflops_pallas8"] = flops / t_pl / 1e6
+            rows.append(entry)
+            if verbose:
+                print(f"  {g.name:16s} N={n:3d} "
+                      f"coo {entry['gflops_coo']:7.2f} | "
+                      f"16x1 {entry['gflops_blocked16']:7.2f} | "
+                      f"8x1 {entry['gflops_blocked8']:7.2f} GFLOPS | "
+                      f"8v16 {entry['speedup_8_vs_16']:.2f}x")
+    gm = geomean([r["speedup_8_vs_16"] for r in rows])
+    gm_coo = geomean([r["speedup_8_vs_coo"] for r in rows])
+    if verbose:
+        print(f"  geomean speedup 8x1 vs 16x1: {gm:.2f}x | vs coo: {gm_coo:.2f}x")
+    write_csv("fig11_spmm.csv", rows)
+    return {"geomean_8_vs_16": gm, "geomean_8_vs_coo": gm_coo, "rows": rows}
+
+
+if __name__ == "__main__":
+    run()

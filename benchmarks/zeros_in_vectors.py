@@ -1,0 +1,40 @@
+"""Paper Table 2: explicit zeros inside nonzero vectors, 16×1 vs 8×1.
+
+The paper observes ~50% fewer carried zeros at 8×1 across all datasets.
+Exact counts from the mask structure.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import from_coo, zeros_in_nonzero_vectors
+
+from .common import suite, write_csv
+
+
+def run(scale: float = 0.02, verbose: bool = True):
+    rows = []
+    for g in suite(scale):
+        shape = (g.num_nodes, g.num_nodes)
+        z8 = zeros_in_nonzero_vectors(
+            from_coo(g.rows, g.cols, g.vals, shape, vector_size=8))
+        z16 = zeros_in_nonzero_vectors(
+            from_coo(g.rows, g.cols, g.vals, shape, vector_size=16))
+        rows.append({
+            "matrix": g.name, "nnz": g.num_edges,
+            "zeros_16x1": z16, "zeros_8x1": z8,
+            "reduction": 1.0 - z8 / max(z16, 1),
+        })
+        if verbose:
+            print(f"  {g.name:16s} zeros 16x1={z16:>12,} 8x1={z8:>12,} "
+                  f"(-{rows[-1]['reduction']:.0%})")
+    mean_red = float(np.mean([r["reduction"] for r in rows]))
+    if verbose:
+        print(f"  mean zero reduction: {mean_red:.1%} (paper Table 2: ≈50%)")
+    write_csv("table2_zeros.csv", rows)
+    return {"mean_reduction": mean_red, "rows": rows}
+
+
+if __name__ == "__main__":
+    run()

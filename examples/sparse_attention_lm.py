@@ -1,0 +1,76 @@
+"""Beyond-paper integration: FlashSparse block-sparse attention in an LM.
+
+The paper's operators are GNN-flavoured; this example shows the same
+SDDMM → sparse-softmax → SpMM pipeline serving as *sparse attention* in a
+transformer: a fixed block-sparse causal pattern (local window + strided
+global, BigBird-ish) is stored as ME-BCRS at V=8 granularity; attention
+scores are computed only at the nonzero pattern (SDDMM), row-normalized
+(sparse softmax), and aggregated (SpMM).
+
+Validates against dense masked attention, and reports the compute saved
+vs dense full attention.
+
+  PYTHONPATH=src python examples/sparse_attention_lm.py
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import block_format, from_coo, sddmm_blocked, spmm_blocked, with_values
+from repro.core.softmax import sparse_softmax
+
+
+def block_sparse_causal_pattern(seq: int, window: int = 64, stride: int = 128):
+    """Local causal window + strided global tokens (BigBird-ish)."""
+    rows, cols = [], []
+    for i in range(seq):
+        lo = max(0, i - window + 1)
+        for j in range(lo, i + 1):
+            rows.append(i), cols.append(j)
+        for j in range(0, lo, stride):
+            rows.append(i), cols.append(j)
+    return np.asarray(rows), np.asarray(cols)
+
+
+def sparse_attention(blocked, q, k, v):
+    """One head of FlashSparse attention: SDDMM → softmax → SpMM."""
+    scores = sddmm_blocked(blocked, q, k) / np.sqrt(q.shape[-1])
+    probs = sparse_softmax(blocked, scores)
+    return spmm_blocked(with_values(blocked, probs.astype(v.dtype)), v)
+
+
+def main():
+    seq, d = 512, 64
+    rows, cols = block_sparse_causal_pattern(seq)
+    vals = np.ones_like(rows, np.float32)
+    fmt = from_coo(rows, cols, vals, (seq, seq), vector_size=8)
+    blocked = block_format(fmt, k_blk=8)
+    density = len(rows) / seq ** 2
+    print(f"pattern: {len(rows):,} nonzeros of {seq * seq:,} "
+          f"({density:.1%} dense) — compute saved vs full: {1 - density:.1%}")
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((seq, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((seq, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((seq, d)).astype(np.float32))
+
+    out_sparse = sparse_attention(blocked, q, k, v)
+
+    # dense oracle: same mask through standard attention
+    mask = np.zeros((seq, seq), bool)
+    mask[rows, cols] = True
+    scores = (q @ k.T) / np.sqrt(d)
+    scores = jnp.where(jnp.asarray(mask), scores, -1e30)
+    out_dense = jax.nn.softmax(scores, axis=-1) @ v
+
+    err = float(jnp.max(jnp.abs(out_sparse - out_dense)))
+    print(f"max |sparse - dense masked| = {err:.2e}")
+    np.testing.assert_allclose(np.asarray(out_sparse), np.asarray(out_dense),
+                               rtol=2e-4, atol=2e-4)
+    print("block-sparse attention == dense masked attention  ✓")
+
+
+if __name__ == "__main__":
+    main()

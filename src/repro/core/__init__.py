@@ -1,0 +1,46 @@
+"""FlashSparse core: ME-BCRS format, SpMM/SDDMM operators, redundancy metrics."""
+
+from .format import (
+    MEBCRS,
+    BlockedMEBCRS,
+    block_format,
+    from_coo,
+    from_dense,
+    memory_footprint_me_bcrs,
+    memory_footprint_sr_bcrs,
+    to_dense,
+)
+from .metrics import (
+    data_access_bytes,
+    mma_count,
+    padded_flops,
+    summarize,
+    zeros_in_nonzero_vectors,
+)
+from .sddmm import sddmm, sddmm_blocked, sddmm_coo, sddmm_dense_ref, with_values
+from .spmm import spmm, spmm_blocked, spmm_coo_segment, spmm_dense_ref
+
+__all__ = [
+    "MEBCRS",
+    "BlockedMEBCRS",
+    "block_format",
+    "from_coo",
+    "from_dense",
+    "to_dense",
+    "memory_footprint_me_bcrs",
+    "memory_footprint_sr_bcrs",
+    "spmm",
+    "spmm_blocked",
+    "spmm_coo_segment",
+    "spmm_dense_ref",
+    "sddmm",
+    "sddmm_blocked",
+    "sddmm_coo",
+    "sddmm_dense_ref",
+    "with_values",
+    "mma_count",
+    "zeros_in_nonzero_vectors",
+    "data_access_bytes",
+    "padded_flops",
+    "summarize",
+]

@@ -1,0 +1,281 @@
+"""ME-BCRS: memory-efficient block-compressed row storage (FlashSparse §3.5).
+
+The sparse matrix A (M, K) is partitioned into row *windows* of V rows
+(V = 8 is FlashSparse's minimal granularity; V = 16 reproduces the
+TC-GNN / DTC-SpMM baseline).  Within a window, any column holding at least
+one nonzero is a *nonzero vector*.  ME-BCRS stores only nonzero vectors —
+no zero-vector padding — using three arrays:
+
+  row_pointers   (W + 1,) int32   start of each window in column_indices
+  column_indices (NNZV,)  int32   column id of each nonzero vector
+  values         (NNZV, V)        the V elements of each vector
+
+``values`` is **vector-major**: ``values[t]`` is the t-th nonzero vector,
+i.e. the storage *is* Aᵀ restricted to nonzero vectors.  This is the TPU
+realization of the paper's swap-and-transpose strategy: the window GEMM
+``C_w = A_w @ B_g`` is executed as a contraction over the vector index with
+the sparse operand logically transposed (``C_wᵀ = B_gᵀ @ A_wᵀ``), so the
+window size V sits on the minor, sublane-aligned dimension of every tile
+and V = 8 costs nothing on the MXU.
+
+``mask`` records which elements of each nonzero vector are true nonzeros of
+A — needed by SDDMM (sampled write-back) and by the redundancy metrics.
+
+A *blocked* view (:class:`BlockedMEBCRS`) pads each window's vector count to
+a multiple of ``K_BLK`` for the grouped window-GEMM (XLA and Pallas paths).
+Padding lives only in the blocked view; the canonical format stays
+padding-free, exactly like the paper (the kernel reconstructs the residue
+arithmetically — here via the ``block_win`` scalar-prefetch metadata).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MEBCRS",
+    "BlockedMEBCRS",
+    "from_dense",
+    "from_coo",
+    "to_dense",
+    "block_format",
+    "memory_footprint_me_bcrs",
+    "memory_footprint_sr_bcrs",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class MEBCRS:
+    """Padding-free ME-BCRS sparse matrix (FlashSparse §3.5)."""
+
+    row_pointers: jax.Array    # (W + 1,) int32
+    column_indices: jax.Array  # (NNZV,) int32
+    values: jax.Array          # (NNZV, V) — vector-major (= Aᵀ layout)
+    mask: jax.Array            # (NNZV, V) bool — true-nonzero positions
+    shape: Tuple[int, int]     # (M, K) of the dense matrix
+    vector_size: int           # V
+
+    @property
+    def num_windows(self) -> int:
+        return int(self.row_pointers.shape[0]) - 1
+
+    @property
+    def nnzv(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(np.asarray(jnp.sum(self.mask)))
+
+    def tree_flatten(self):
+        leaves = (self.row_pointers, self.column_indices, self.values, self.mask)
+        return leaves, (self.shape, self.vector_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        shape, v = aux
+        return cls(*leaves, shape=shape, vector_size=v)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockedMEBCRS:
+    """Blocked execution view: windows padded to multiples of K_BLK vectors.
+
+    Flat arrays over NB = sum_w ceil(nnzv_w / K_BLK) K-blocks:
+      vals      (NB * K_BLK, V)   zero-padded vector values
+      cols      (NB * K_BLK,)     column ids (0 for padding — vals are 0)
+      mask      (NB * K_BLK, V)   element mask (False for padding)
+      block_win (NB,) int32       output window of each K-block
+    Consecutive K-blocks of one window are adjacent, so a sequential kernel
+    can accumulate into one resident output tile (revisiting pattern).
+    """
+
+    vals: jax.Array
+    cols: jax.Array
+    mask: jax.Array
+    block_win: jax.Array
+    shape: Tuple[int, int]
+    vector_size: int
+    k_blk: int
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.block_win.shape[0])
+
+    @property
+    def num_windows(self) -> int:
+        return -(-self.shape[0] // self.vector_size)
+
+    def tree_flatten(self):
+        leaves = (self.vals, self.cols, self.mask, self.block_win)
+        return leaves, (self.shape, self.vector_size, self.k_blk)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        shape, v, k = aux
+        return cls(*leaves, shape=shape, vector_size=v, k_blk=k)
+
+
+# ---------------------------------------------------------------------------
+# Construction (host-side numpy: format translation is a preprocessing step,
+# mirroring the paper's CUDA-side CSR→ME-BCRS converter).
+# ---------------------------------------------------------------------------
+
+
+def from_coo(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: Tuple[int, int],
+    vector_size: int = 8,
+    dtype=jnp.float32,
+) -> MEBCRS:
+    """Build ME-BCRS from COO triplets (duplicates are summed)."""
+    m, k = shape
+    v = vector_size
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals)
+    if rows.size and (rows.max() >= m or cols.max() >= k):
+        raise ValueError("COO indices out of bounds for shape")
+
+    w = -(-m // v)
+    win = rows // v
+    r_in_win = rows % v
+
+    # Sort by (window, column) and coalesce duplicates into vectors.
+    vec_key = win * k + cols
+    order = np.argsort(vec_key, kind="stable")
+    vec_key_s = vec_key[order]
+    uniq_keys, vec_of_elem = np.unique(vec_key_s, return_inverse=True)
+    nnzv = uniq_keys.shape[0]
+
+    values = np.zeros((nnzv, v), dtype=np.float64)
+    maskf = np.zeros((nnzv, v), dtype=bool)
+    np.add.at(values, (vec_of_elem, r_in_win[order]), vals[order])
+    maskf[vec_of_elem, r_in_win[order]] = True
+
+    vec_win = (uniq_keys // k).astype(np.int32)
+    vec_col = (uniq_keys % k).astype(np.int32)
+    row_pointers = np.zeros(w + 1, dtype=np.int32)
+    np.add.at(row_pointers, vec_win + 1, 1)
+    row_pointers = np.cumsum(row_pointers, dtype=np.int32)
+
+    return MEBCRS(
+        row_pointers=jnp.asarray(row_pointers),
+        column_indices=jnp.asarray(vec_col),
+        values=jnp.asarray(values, dtype=dtype),
+        mask=jnp.asarray(maskf),
+        shape=(m, k),
+        vector_size=v,
+    )
+
+
+def from_dense(a: np.ndarray, vector_size: int = 8, dtype=None) -> MEBCRS:
+    """Build ME-BCRS from a dense matrix."""
+    a = np.asarray(a)
+    rows, cols = np.nonzero(a)
+    dtype = dtype or jnp.asarray(a).dtype
+    return from_coo(rows, cols, a[rows, cols], a.shape, vector_size, dtype=dtype)
+
+
+def to_dense(fmt: MEBCRS) -> jax.Array:
+    """Reconstruct the dense matrix (oracle for round-trip tests)."""
+    m, k = fmt.shape
+    v = fmt.vector_size
+    w = fmt.num_windows
+    rp = np.asarray(fmt.row_pointers)
+    # window id of each vector, via the CSR pointer expansion
+    win_of_vec = np.repeat(np.arange(w, dtype=np.int64), np.diff(rp))
+    out = np.zeros((w * v, k), dtype=np.asarray(fmt.values).dtype)
+    vals = np.asarray(fmt.values) * np.asarray(fmt.mask)
+    ci = np.asarray(fmt.column_indices)
+    for t in range(vals.shape[0]):
+        out[win_of_vec[t] * v : (win_of_vec[t] + 1) * v, ci[t]] += vals[t]
+    return jnp.asarray(out[:m])
+
+
+def block_format(fmt: MEBCRS, k_blk: int = 8) -> BlockedMEBCRS:
+    """Pad each window's vectors to a multiple of ``k_blk`` → blocked view.
+
+    This is where the paper's "last TC block residue" lives: padding columns
+    get value 0 / mask False / column 0, so their MMA contribution vanishes
+    (same arithmetic-elimination trick as the paper's modulo residue test,
+    but resolved at format-translation time so the kernel's scalar prefetch
+    stays branch-free).
+    """
+    rp = np.asarray(fmt.row_pointers)
+    counts = np.diff(rp)
+    w = fmt.num_windows
+    v = fmt.vector_size
+    nblk_per_win = -(-counts // k_blk)
+    nblk_per_win = np.maximum(nblk_per_win, 0)
+    nb = max(int(nblk_per_win.sum()), 1)  # >=1 so kernels always have a block
+    nnzp = nb * k_blk
+
+    vals = np.zeros((nnzp, v), dtype=np.asarray(fmt.values).dtype)
+    cols = np.zeros((nnzp,), dtype=np.int32)
+    mask = np.zeros((nnzp, v), dtype=bool)
+    block_win = np.zeros((nb,), dtype=np.int32)
+
+    src_vals = np.asarray(fmt.values)
+    src_cols = np.asarray(fmt.column_indices)
+    src_mask = np.asarray(fmt.mask)
+
+    dst = 0
+    blk = 0
+    for wi in range(w):
+        cnt = int(counts[wi])
+        s = int(rp[wi])
+        if cnt:
+            vals[dst : dst + cnt] = src_vals[s : s + cnt]
+            cols[dst : dst + cnt] = src_cols[s : s + cnt]
+            mask[dst : dst + cnt] = src_mask[s : s + cnt]
+        nblk = int(nblk_per_win[wi])
+        block_win[blk : blk + nblk] = wi
+        dst += nblk * k_blk
+        blk += nblk
+    if blk == 0:  # all-empty matrix: one dummy block on window 0
+        block_win[0] = 0
+
+    return BlockedMEBCRS(
+        vals=jnp.asarray(vals),
+        cols=jnp.asarray(cols),
+        mask=jnp.asarray(mask),
+        block_win=jnp.asarray(block_win),
+        shape=fmt.shape,
+        vector_size=v,
+        k_blk=k_blk,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Memory footprint accounting (paper Table 7)
+# ---------------------------------------------------------------------------
+
+
+def memory_footprint_me_bcrs(fmt: MEBCRS, value_bytes: int = 2) -> int:
+    """Bytes of the padding-free ME-BCRS format (W row pointers)."""
+    w = fmt.num_windows
+    nnzv = fmt.nnzv
+    return 4 * w + 4 * nnzv + value_bytes * nnzv * fmt.vector_size
+
+
+def memory_footprint_sr_bcrs(fmt: MEBCRS, k: int = 8, value_bytes: int = 2) -> int:
+    """Bytes of the zero-padding SR-BCRS scheme [Li et al., SC'22].
+
+    Each window is padded to a multiple of ``k`` vectors and 2·W row
+    pointers are stored (start of window + start of padding), per §3.5.
+    """
+    counts = np.diff(np.asarray(fmt.row_pointers))
+    padded = (-(-counts // k) * k).sum()
+    w = fmt.num_windows
+    return 4 * 2 * w + 4 * int(padded) + value_bytes * int(padded) * fmt.vector_size

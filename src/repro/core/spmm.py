@@ -1,0 +1,77 @@
+"""SpMM on ME-BCRS: C (M, N) = A_sparse (M, K) @ B_dense (K, N).
+
+Three execution paths:
+
+  * ``blocked`` (default, XLA): the swap-and-transpose window GEMM expressed
+    in jnp — gather B rows once (contiguous, the TPU analogue of the paper's
+    coalesced access), per-K-block partial products, segment-sum over
+    windows.  jit/pjit/shard_map friendly; this path backs the dry-run and
+    the distributed models.
+  * ``pallas``: the TPU kernel (kernels/spmm_pallas.py), grouped window-GEMM
+    with scalar prefetch.  Validated in interpret mode on CPU.
+  * ``coo_segment``: element-wise scatter-add SpMM — the "CUDA-core class"
+    baseline (Sputnik / RoDe / cuSPARSE row algorithms reduce to this data
+    flow on TPU); also serves as an independent oracle.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .format import MEBCRS, BlockedMEBCRS, block_format
+
+__all__ = ["spmm", "spmm_blocked", "spmm_coo_segment", "spmm_dense_ref"]
+
+
+def spmm_dense_ref(a_dense: jax.Array, b: jax.Array) -> jax.Array:
+    """Dense oracle (the "cuSPARSE-class" dense baseline is simply XLA dot)."""
+    return jnp.dot(a_dense, b, preferred_element_type=jnp.float32).astype(b.dtype)
+
+
+@partial(jax.jit, static_argnames=("out_rows",))
+def _spmm_blocked_impl(blocked: BlockedMEBCRS, b: jax.Array, out_rows: int):
+    v = blocked.vector_size
+    k_blk = blocked.k_blk
+    nb = blocked.num_blocks
+    w = blocked.num_windows
+
+    bgath = jnp.take(b, blocked.cols, axis=0)            # (NB*K_BLK, N) contiguous gather
+    vals = blocked.vals.reshape(nb, k_blk, v)            # Aᵀ blocks (k × n of the MMA)
+    gb = bgath.reshape(nb, k_blk, -1)                    # Bᵀ side (m × k after swap)
+    # Swap-and-transpose contraction: C_wᵀ = Σ_blocks B_gᵀ @ A_wᵀ.  We keep C
+    # un-transposed in memory; the contraction over the vector index t is
+    # identical mathematics (see DESIGN.md §2).
+    partial_c = jnp.einsum(
+        "bkv,bkn->bvn", vals, gb, preferred_element_type=jnp.float32
+    )                                                     # (NB, V, N)
+    c_win = jax.ops.segment_sum(partial_c, blocked.block_win, num_segments=w)
+    c = c_win.reshape(w * v, -1)[:out_rows]
+    return c.astype(b.dtype)
+
+
+def spmm_blocked(fmt, b: jax.Array, k_blk: int = 8) -> jax.Array:
+    blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
+    return _spmm_blocked_impl(blocked, b, blocked.shape[0])
+
+
+@partial(jax.jit, static_argnames=("num_rows",))
+def spmm_coo_segment(rows, cols, vals, b, num_rows: int):
+    """Element-wise scatter-add SpMM (CUDA-core-class baseline / oracle)."""
+    contrib = vals[:, None] * jnp.take(b, cols, axis=0)
+    return jax.ops.segment_sum(contrib, rows, num_segments=num_rows).astype(b.dtype)
+
+
+def spmm(fmt: MEBCRS, b: jax.Array, impl: str = "blocked", k_blk: int = 8,
+         interpret: bool = True) -> jax.Array:
+    """SpMM dispatch. ``impl`` ∈ {"blocked", "pallas"}."""
+    if impl == "blocked":
+        return spmm_blocked(fmt, b, k_blk=k_blk)
+    if impl == "pallas":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
+        return ops.spmm(blocked, b, interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}")

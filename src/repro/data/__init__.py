@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipelines (straggler-tolerant by design)."""
+
+from .synthetic import SyntheticLMData, input_specs, make_batch
+
+__all__ = ["SyntheticLMData", "input_specs", "make_batch"]

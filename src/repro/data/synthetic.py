@@ -1,0 +1,112 @@
+"""Step-indexed synthetic LM data: any host can regenerate any step.
+
+Straggler/fault posture (DESIGN.md §6): the pipeline is a pure function
+``(seed, step, host_shard) → batch``, so there is no iterator state to hand
+off when a host is replaced — the restarted worker computes exactly the
+batch its predecessor would have.  Checkpoints therefore only need the step
+counter to resume bit-identically.
+
+Token statistics follow a Zipfian unigram over the vocab (real-corpus-like
+rank-frequency), mixed with short repeated n-grams so the LM loss actually
+decreases during the example runs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of an (arch × shape) cell — the dry-run contract (no host
+allocation at 4k×256 scale).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+
+__all__ = ["SyntheticLMData", "make_batch", "input_specs", "decode_specs"]
+
+
+def _rng_for(seed: int, step: int, shard: int) -> np.random.Generator:
+    # Philox is counter-based: cheap to construct per (step, shard)
+    return np.random.Generator(np.random.Philox(key=seed, counter=[step, shard, 0, 0]))
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMData:
+    cfg: ArchConfig
+    batch_size: int          # per-host batch
+    seq_len: int
+    seed: int = 0
+    host_shard: int = 0      # this host's index in the data-loading group
+    zipf_a: float = 1.2
+    ngram_period: int = 64   # repeated motif length → learnable structure
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = _rng_for(self.seed, step, self.host_shard)
+        v = self.cfg.vocab
+        b, s = self.batch_size, self.seq_len
+        # Zipf over vocab, clipped
+        base = rng.zipf(self.zipf_a, size=(b, s)).astype(np.int64)
+        tokens = np.minimum(base - 1, v - 1).astype(np.int32)
+        # overlay a per-sequence repeating motif (predictable structure)
+        motif_len = self.ngram_period
+        motif = rng.integers(0, v, size=(b, motif_len), dtype=np.int32)
+        reps = -(-s // motif_len)
+        motif_full = np.tile(motif, (1, reps))[:, :s]
+        use_motif = rng.random((b, s)) < 0.5
+        tokens = np.where(use_motif, motif_full, tokens)
+        out: Dict[str, np.ndarray] = {"tokens": tokens}
+        extra = _family_extras(self.cfg, b, s, rng)
+        out.update(extra)
+        return out
+
+
+def _family_extras(cfg: ArchConfig, b: int, s: int,
+                   rng: Optional[np.random.Generator]) -> Dict[str, np.ndarray]:
+    """Stub modality inputs: precomputed frame/patch embeddings per brief."""
+    extras: Dict[str, np.ndarray] = {}
+    if cfg.family in ("encdec", "audio"):
+        src_len = max(cfg.prefix_len or s // 2, 8)
+        if rng is None:
+            extras["src_embeds"] = np.zeros((b, src_len, cfg.d_model), np.float32)
+        else:
+            extras["src_embeds"] = rng.standard_normal(
+                (b, src_len, cfg.d_model)).astype(np.float32)
+    elif cfg.family == "vlm" and cfg.prefix_len:
+        if rng is None:
+            extras["prefix_embeds"] = np.zeros((b, cfg.prefix_len, cfg.d_model),
+                                               np.float32)
+        else:
+            extras["prefix_embeds"] = rng.standard_normal(
+                (b, cfg.prefix_len, cfg.d_model)).astype(np.float32)
+    return extras
+
+
+def make_batch(cfg: ArchConfig, batch_size: int, seq_len: int, step: int = 0,
+               seed: int = 0) -> Dict[str, np.ndarray]:
+    return SyntheticLMData(cfg, batch_size, seq_len, seed=seed).batch(step)
+
+
+# ---------------------------------------------------------------- dry-run --
+
+
+def input_specs(cfg: ArchConfig, batch: int, seq_len: int
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for a *training* batch (no allocation)."""
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)}
+    if cfg.family in ("encdec", "audio"):
+        src_len = max(cfg.prefix_len or seq_len // 2, 8)
+        specs["src_embeds"] = jax.ShapeDtypeStruct(
+            (batch, src_len, cfg.d_model), jnp.float32)
+    elif cfg.family == "vlm" and cfg.prefix_len:
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.prefix_len, cfg.d_model), jnp.float32)
+    return specs
+
+
+def decode_specs(cfg: ArchConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """One-token decode input (the cache specs come from init_cache's shapes)."""
+    return {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}

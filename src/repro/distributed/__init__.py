@@ -1,0 +1,21 @@
+"""Distribution layer: sharding rules, elastic resharding, comm overlap."""
+
+from .sharding import (
+    LOGICAL_AXIS_RULES,
+    batch_pspec,
+    cache_shardings,
+    fit_pspec,
+    logical_spec_for,
+    param_shardings,
+    shardings_like,
+)
+
+__all__ = [
+    "LOGICAL_AXIS_RULES",
+    "batch_pspec",
+    "cache_shardings",
+    "fit_pspec",
+    "logical_spec_for",
+    "param_shardings",
+    "shardings_like",
+]

@@ -1,0 +1,68 @@
+"""Activation-sharding context: logical constraints inside model code.
+
+XLA's sharding propagation pins weights (from in_shardings) but can lose
+the *activation* batch dim through gathers/reshapes (observed: replicated
+(B, S, V) logits on a 256-chip mesh).  Production frameworks solve this
+with explicit logical constraints at layer boundaries; this module is the
+minimal version of that machinery:
+
+    with activation_mesh(mesh):
+        lowered = jax.jit(step, ...).lower(...)
+
+and inside model code:
+
+    x = constrain(x, "act_batch", None, None)
+
+When no mesh is active (unit tests, single-device runs) ``constrain`` is an
+exact no-op, keeping the model functions pure jnp.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .sharding import LOGICAL_AXIS_RULES, fit_pspec
+
+__all__ = ["activation_mesh", "constrain", "current_mesh"]
+
+_STATE = threading.local()
+
+# activation logical axes (extends the weight rules)
+ACT_RULES = dict(
+    LOGICAL_AXIS_RULES,
+    act_batch=("pod", "data"),
+    act_vocab=("model",),
+    act_heads=("model",),
+    act_ffn=("model",),
+    act_seq=("model",),
+)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(logical) != x.ndim:
+        logical = tuple(logical) + (None,) * (x.ndim - len(logical))
+    spec = fit_pspec(logical, x.shape, mesh, rules=ACT_RULES)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

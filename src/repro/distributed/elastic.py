@@ -1,0 +1,50 @@
+"""Elastic resharding: re-lay a checkpoint onto a different mesh.
+
+Fault-tolerance posture for 1000+-node fleets: when a pod (or slice) fails,
+the job restarts on whatever mesh is still healthy.  Checkpoints are stored
+mesh-agnostically (global logical arrays, see ``repro.train.checkpoint``),
+so resuming is: load global arrays → recompute shardings for the *new* mesh
+with the same logical rules → ``jax.device_put`` each leaf.  Growth
+(scale-up) is the same operation in reverse.
+
+Nothing here depends on the old mesh's shape — that is the invariant that
+makes elasticity work: the checkpoint format never encodes device topology.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from .sharding import param_shardings, shardings_like
+
+__all__ = ["reshard_state", "reshard_tree"]
+
+
+def reshard_tree(tree: Any, shardings: Any) -> Any:
+    """device_put every leaf to its (new-mesh) sharding."""
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def reshard_state(state: Any, new_mesh: Mesh,
+                  rules: Optional[dict] = None) -> Any:
+    """Re-lay a TrainState-like dict {params, opt, step, ...} onto ``new_mesh``.
+
+    Params get the logical-rule shardings; optimizer moments inherit their
+    param's sharding (``shardings_like``); everything else replicates.
+    """
+    p_shard = param_shardings(state["params"], new_mesh, rules)
+    out = dict(state)
+    out["params"] = reshard_tree(state["params"], p_shard)
+    if "opt" in state and state["opt"] is not None:
+        def reshard_moment(moment):
+            return reshard_tree(moment, shardings_like(p_shard, moment))
+
+        opt = dict(state["opt"])
+        for k in ("m", "v", "m_scale", "v_scale", "err"):
+            if k in opt and opt[k] is not None:
+                opt[k] = reshard_moment(opt[k])
+        out["opt"] = opt
+    return out

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for FlashSparse SpMM / SDDMM (+ jnp oracles)."""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,39 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret=True`` (the default off-TPU) executes the kernel bodies in
+Python on CPU for correctness validation; on a real TPU pass
+``interpret=False`` to compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .sddmm_pallas import sddmm_pallas
+from .spmm_pallas import spmm_pallas, spmm_pallas_noncoalesced
+
+__all__ = ["spmm", "sddmm", "spmm_noncoalesced"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def spmm(blocked, b_dense, *, n_blk: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return spmm_pallas(blocked, b_dense, n_blk=n_blk, interpret=interpret)
+
+
+def spmm_noncoalesced(blocked, b_dense, *, n_blk: int = 128,
+                      interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return spmm_pallas_noncoalesced(blocked, b_dense, n_blk=n_blk,
+                                    interpret=interpret)
+
+
+def sddmm(blocked, q, k, *, f_blk: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return sddmm_pallas(blocked, q, k, f_blk=f_blk, interpret=interpret)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (independent data flow).
+
+These deliberately avoid the blocked-einsum formulation used by
+``repro.core`` — they reconstruct contributions element-wise from the
+blocked arrays — so kernel, core impl, and oracle are three independent
+computations of the same result.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["spmm_ref", "sddmm_ref"]
+
+
+def spmm_ref(blocked, b_dense: jax.Array) -> jax.Array:
+    """Oracle SpMM: per-vector outer products scatter-added into windows."""
+    v = blocked.vector_size
+    w = blocked.num_windows
+    nnzp = blocked.vals.shape[0]
+    win_of_vec = jnp.repeat(blocked.block_win, blocked.k_blk)      # (NNZP,)
+    bg = jnp.take(b_dense, blocked.cols, axis=0)                   # (NNZP, N)
+    contrib = blocked.vals[:, :, None] * bg[:, None, :]            # (NNZP, V, N)
+    c_win = jax.ops.segment_sum(contrib, win_of_vec, num_segments=w)
+    out = c_win.reshape(w * v, -1)[: blocked.shape[0]]
+    return out.astype(b_dense.dtype)
+
+
+def sddmm_ref(blocked, q: jax.Array, k: jax.Array) -> jax.Array:
+    """Oracle SDDMM: per-vector dot products, masked."""
+    v = blocked.vector_size
+    w = blocked.num_windows
+    win_of_vec = jnp.repeat(blocked.block_win, blocked.k_blk)      # (NNZP,)
+    qpad = jnp.zeros((w * v, q.shape[1]), q.dtype).at[: q.shape[0]].set(q)
+    qwin = qpad.reshape(w, v, -1)[win_of_vec]                      # (NNZP, V, F)
+    kg = jnp.take(k, blocked.cols, axis=0)                         # (NNZP, F)
+    scores = jnp.sum(qwin * kg[:, None, :], axis=-1)               # (NNZP, V)
+    return (scores * blocked.mask).astype(q.dtype)

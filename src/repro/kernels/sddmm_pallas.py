@@ -1,0 +1,97 @@
+"""Pallas TPU SDDMM kernel — sampled QKᵀ over the ME-BCRS pattern.
+
+Paper §3.4 adapted to TPU: the output is produced directly in ME-BCRS
+vector-major layout (values ``(K_BLK, V)`` per block), so it feeds the
+subsequent SpMM with **zero** re-layout — the paper needs Algorithm 1's
+per-thread offset arithmetic to split the 8×16 TC block C into SpMM-shaped
+sub-blocks; on TPU the block layouts coincide by construction.
+
+Grid ``(NB, F / F_BLK)`` with the feature dimension innermost: the output
+block for sparse block ``b`` stays resident in VMEM while the QKᵀ
+contraction accumulates over feature tiles; the sparsity mask (the
+"sampled" part) is applied on the final feature tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sddmm_pallas"]
+
+
+def _sddmm_kernel(block_win_ref, q_ref, kg_ref, mask_ref, o_ref, *, nf: int):
+    f = pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (K_BLK, V) += kg (K_BLK, F_BLK) @ qᵀ (F_BLK, V)
+    partial = jax.lax.dot_general(
+        kg_ref[...],
+        q_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += partial
+
+    @pl.when(f == nf - 1)
+    def _mask():
+        o_ref[...] *= mask_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("v", "k_blk", "f_blk", "interpret"))
+def _sddmm_call(block_win, qpad, kgath, mask, *, v, k_blk, f_blk, interpret):
+    nb = block_win.shape[0]
+    f = qpad.shape[1]
+    nf = f // f_blk
+    grid = (nb, nf)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v, f_blk), lambda b, fi, bw: (bw[b], fi)),
+            pl.BlockSpec((k_blk, f_blk), lambda b, fi, bw: (b, fi)),
+            pl.BlockSpec((k_blk, v), lambda b, fi, bw: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((k_blk, v), lambda b, fi, bw: (b, 0)),
+    )
+    out_shape = jax.ShapeDtypeStruct((nb * k_blk, v), jnp.float32)
+    kernel = functools.partial(_sddmm_kernel, nf=nf)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(block_win, qpad, kgath, mask)
+
+
+def sddmm_pallas(blocked, q: jax.Array, k: jax.Array, *, f_blk: int = 128,
+                 interpret: bool = True) -> jax.Array:
+    """SDDMM over a :class:`BlockedMEBCRS` pattern.
+
+    Returns blocked-layout values ``(NB * K_BLK, V)`` in ``q`` dtype,
+    directly consumable by :func:`repro.core.sddmm.with_values` + SpMM.
+    """
+    v = blocked.vector_size
+    w = blocked.num_windows
+    f = q.shape[1]
+    f_blk = min(f_blk, max(f, 1))
+    f_pad = -(-f // f_blk) * f_blk
+
+    qpad = jnp.zeros((w * v, f_pad), q.dtype).at[: q.shape[0], :f].set(q)
+    kgath = jnp.take(k, blocked.cols, axis=0)
+    if f_pad != f:
+        kgath = jnp.pad(kgath, ((0, 0), (0, f_pad - f)))
+
+    out = _sddmm_call(
+        blocked.block_win, qpad, kgath, blocked.mask,
+        v=v, k_blk=blocked.k_blk, f_blk=f_blk, interpret=interpret,
+    )
+    return out.astype(q.dtype)

@@ -1,0 +1,165 @@
+"""Pallas TPU SpMM kernel — grouped window-GEMM over blocked ME-BCRS.
+
+This is the TPU realization of FlashSparse's swap-and-transpose SpMM
+(paper §3.3), adapted per DESIGN.md §2:
+
+  * The sparse operand arrives **vector-major** (``vals (K_BLK, V)`` = Aᵀ),
+    so the window size V = 8 sits on the minor dimension of the MXU
+    contraction — the granularity the paper obtains by swapping MMA
+    operands falls out of the storage layout here.
+  * Dense rows are staged through one contiguous gather ``bgath = B[cols]``
+    so every BlockSpec DMA is a full-lane contiguous HBM→VMEM copy — the
+    TPU analogue of the paper's coalesced thread mapping (§3.3, Fig. 7).
+    The "non-coalesced" ablation mode instead DMAs each dense row
+    separately through a (1, N) grid, reproducing the strided-access
+    penalty structurally.
+  * ME-BCRS's padding-free residue handling (§3.5) appears as the
+    ``block_win`` scalar-prefetch array: padding vectors inside the last
+    K-block of a window carry zero values, so their MXU contribution
+    vanishes — the same arithmetic elimination as the paper's modulo test,
+    resolved without branches.
+
+Grid: ``(N / N_BLK, NB)`` with the block index innermost, so all K-blocks
+of one output window are consecutive and the output tile stays resident in
+VMEM across the accumulation (revisiting pattern).  The accumulator block
+is (V=8, N_BLK=128) fp32 — exactly one VREG tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["spmm_pallas", "spmm_pallas_noncoalesced"]
+
+
+def _spmm_kernel(block_win_ref, vals_ref, bg_ref, o_ref, *, nb: int):
+    j = pl.program_id(0)
+    b = pl.program_id(1)
+    del j
+    w = block_win_ref[b]
+    prev_w = block_win_ref[jnp.maximum(b - 1, 0)]
+    is_first = jnp.logical_or(b == 0, prev_w != w)
+
+    @pl.when(is_first)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # contraction over the K_BLK vector index: (V, N_BLK) += valsᵀ @ bgath
+    partial = jax.lax.dot_general(
+        vals_ref[...],
+        bg_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += partial
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_windows", "v", "k_blk", "n_blk", "interpret")
+)
+def _spmm_call(block_win, vals, bgath, *, num_windows, v, k_blk, n_blk,
+               interpret):
+    nb = block_win.shape[0]
+    n = bgath.shape[1]
+    grid = (n // n_blk, nb)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k_blk, v), lambda j, b, bw: (b, 0)),
+            pl.BlockSpec((k_blk, n_blk), lambda j, b, bw: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((v, n_blk), lambda j, b, bw: (bw[b], j)),
+    )
+    out_shape = jax.ShapeDtypeStruct((num_windows * v, n), jnp.float32)
+    kernel = functools.partial(_spmm_kernel, nb=nb)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(block_win, vals, bgath)
+
+
+def _zero_unvisited(out, block_win, num_windows, v):
+    """Windows with no nonzero vectors are never visited by the grid — their
+    output tiles are uninitialized.  Zero them (ME-BCRS stays padding-free,
+    so this is resolved outside the kernel; NaN-safe ``where``)."""
+    visited = jnp.zeros((num_windows,), jnp.bool_).at[block_win].set(True)
+    mask = jnp.repeat(visited, v)[:, None]
+    return jnp.where(mask, out, 0.0)
+
+
+def spmm_pallas(blocked, b_dense: jax.Array, *, n_blk: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """SpMM over a :class:`BlockedMEBCRS`. Returns (M, N) in ``b`` dtype."""
+    m, _ = blocked.shape
+    v = blocked.vector_size
+    num_windows = blocked.num_windows
+    n = b_dense.shape[1]
+    n_blk = min(n_blk, max(n, 1))
+    n_pad = -(-n // n_blk) * n_blk
+    if n_pad != n:
+        b_dense = jnp.pad(b_dense, ((0, 0), (0, n_pad - n)))
+
+    bgath = jnp.take(b_dense, blocked.cols, axis=0)  # coalesced staging
+    out = _spmm_call(
+        blocked.block_win, blocked.vals, bgath, num_windows=num_windows,
+        v=v, k_blk=blocked.k_blk, n_blk=n_blk, interpret=interpret,
+    )
+    out = _zero_unvisited(out, blocked.block_win, num_windows, v)
+    return out[:m, :n].astype(b_dense.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Ablation: non-coalesced access (paper Fig. 15 counterpart).
+# Each dense row is DMA'd individually via a (1, N) block — structurally the
+# strided per-row access the paper's direct thread mapping suffers from.
+# ---------------------------------------------------------------------------
+
+
+def _gather_rowwise_kernel(cols_ref, b_ref, out_ref):
+    out_ref[...] = b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gather_rowwise(cols, b_dense, interpret):
+    nnzp = cols.shape[0]
+    n = b_dense.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nnzp,),
+        in_specs=[pl.BlockSpec((1, n), lambda t, cols: (cols[t], 0))],
+        out_specs=pl.BlockSpec((1, n), lambda t, cols: (t, 0)),
+    )
+    return pl.pallas_call(
+        _gather_rowwise_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nnzp, n), b_dense.dtype),
+        interpret=interpret,
+    )(cols, b_dense)
+
+
+def spmm_pallas_noncoalesced(blocked, b_dense: jax.Array, *, n_blk: int = 128,
+                             interpret: bool = True) -> jax.Array:
+    """Ablation variant: per-row (strided) dense gather instead of staged."""
+    m, _ = blocked.shape
+    v = blocked.vector_size
+    n = b_dense.shape[1]
+    n_blk = min(n_blk, max(n, 1))
+    n_pad = -(-n // n_blk) * n_blk
+    if n_pad != n:
+        b_dense = jnp.pad(b_dense, ((0, 0), (0, n_pad - n)))
+    bgath = _gather_rowwise(blocked.cols, b_dense, interpret)
+    out = _spmm_call(
+        blocked.block_win, blocked.vals, bgath, num_windows=blocked.num_windows,
+        v=v, k_blk=blocked.k_blk, n_blk=n_blk, interpret=interpret,
+    )
+    out = _zero_unvisited(out, blocked.block_win, blocked.num_windows, v)
+    return out[:m, :n].astype(b_dense.dtype)

@@ -1,0 +1,326 @@
+"""(architecture × input-shape × mesh) cell planner for the dry-run.
+
+A *cell* is one AOT-compilable step:
+  train_4k     → train_step(state, batch)          (grad accum + AdamW)
+  prefill_32k  → prefill(params, batch)            (forward + cache build)
+  decode_32k   → serve_step(params, tokens, cache) (one token, full KV cache)
+  long_500k    → serve_step at 524288 cache        (sub-quadratic archs only)
+
+``plan_cell`` resolves every input to ShapeDtypeStructs + NamedShardings
+(zero allocation — ``jax.eval_shape`` over the real init functions, so the
+dry-run exercises *exactly* the shapes the runtime uses), and
+``compile_cell`` does lower()+compile() and wraps the roofline report.
+
+Per-arch execution knobs (microbatching, 8-bit optimizer states) follow
+the same policy the real launcher uses — see ``step_policy``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, cell_is_applicable, get_config
+from repro.data.synthetic import decode_specs, input_specs
+from repro.distributed.ctx import activation_mesh
+from repro.distributed.sharding import (
+    cache_shardings,
+    fit_pspec,
+    param_shardings,
+    shardings_like,
+)
+from repro.models.config import ArchConfig
+from repro.models.lm import init_cache, init_lm, lm_decode_step, lm_prefill
+from repro.roofline.analysis import RooflineReport, analyze_compiled
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import (
+    TrainStepConfig,
+    init_train_state,
+    make_train_step,
+)
+
+__all__ = ["CellPlan", "plan_cell", "compile_cell", "account_cell",
+           "step_policy", "SRC_LEN_DECODE"]
+
+SRC_LEN_DECODE = 1024  # audio-context length held by the enc-dec memory
+
+
+CARRY_BUDGET_BYTES = 4e9  # per-device remat-carry budget for microbatching
+
+
+def step_policy(cfg: ArchConfig, global_batch: int, seq_len: int = 4096,
+                overrides: Optional[Dict] = None,
+                data_shards: int = 16) -> TrainStepConfig:
+    """Execution knobs per arch size (same policy as launch/train.py).
+
+    With per-layer remat + scan-over-layers, the dominant saved state is
+    one (tokens_μ, d_model) carry per layer.  Microbatch count is chosen
+    so L · tokens_per_dev_per_μ · d_model · 2 B stays under
+    CARRY_BUDGET_BYTES; capped at 16 so every device keeps ≥ 1 batch row.
+    """
+    tokens_per_dev = global_batch * seq_len / max(data_shards, 1)
+    layers = cfg.n_layers + cfg.encoder_layers
+    carry_bytes = layers * tokens_per_dev * cfg.d_model * 2
+    micro = max(1, min(16, int(-(-carry_bytes // CARRY_BUDGET_BYTES))))
+    while global_batch % micro:
+        micro -= 1
+    n = cfg.param_count()
+    opt = AdamWConfig(quantize_state=n > 5e10)
+    ts = TrainStepConfig(opt=opt, microbatches=micro)
+    if overrides:
+        ts = dataclasses.replace(ts, **overrides)
+    return ts
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    in_shapes: Tuple
+    in_shardings: Tuple
+    donate: Tuple[int, ...]
+    tokens_per_step: int
+    mflops: float
+    skipped: Optional[str] = None
+
+
+def _replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def _batch_sharding(leaf, mesh: Mesh) -> NamedSharding:
+    """Batch-dim sharding, divisibility-checked (B=1 decode → replicated)."""
+    logical = ("batch",) + (None,) * (len(leaf.shape) - 1)
+    return NamedSharding(mesh, fit_pspec(logical, leaf.shape, mesh))
+
+
+def plan_cell(arch: str, shape_name: str, mesh: Mesh, *,
+              ts_overrides: Optional[Dict] = None,
+              cfg_overrides: Optional[Dict] = None) -> CellPlan:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_applicable(cfg, shape)
+    if not ok:
+        return CellPlan(arch, shape_name, shape.kind, None, (), (), (),
+                        0, 0.0, skipped=why)
+
+    n_active = cfg.active_param_count()
+    b, s = shape.global_batch, shape.seq_len
+
+    data_shards = 1
+    for ax in ("pod", "data"):
+        data_shards *= mesh.shape.get(ax, 1)
+
+    if shape.kind == "train":
+        ts = step_policy(cfg, b, s, ts_overrides, data_shards=data_shards)
+        step = make_train_step(cfg, ts)
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(jax.random.key(0), cfg, ts))
+        batch_shapes = input_specs(cfg, b, s)
+        state_sh = _state_shardings(state_shapes, mesh)
+        batch_sh = jax.tree.map(lambda l: _batch_sharding(l, mesh),
+                                batch_shapes)
+        tokens = b * s
+        return CellPlan(arch, shape_name, "train", step,
+                        (state_shapes, batch_shapes), (state_sh, batch_sh),
+                        (0,), tokens, 6.0 * n_active * tokens)
+
+    if shape.kind == "prefill":
+        def prefill(params, batch):
+            return lm_prefill(params, batch, cfg, capacity=s)
+
+        params_shapes = jax.eval_shape(lambda: init_lm(jax.random.key(0), cfg))
+        batch_shapes = input_specs(cfg, b, s)
+        params_sh = param_shardings(params_shapes, mesh)
+        batch_sh = jax.tree.map(lambda l: _batch_sharding(l, mesh),
+                                batch_shapes)
+        tokens = b * s
+        return CellPlan(arch, shape_name, "prefill", prefill,
+                        (params_shapes, batch_shapes), (params_sh, batch_sh),
+                        (), tokens, 2.0 * n_active * tokens)
+
+    # decode kinds (decode_32k / long_500k): one new token over a cache of s
+    def serve_step(params, tokens_, cache):
+        return lm_decode_step(params, tokens_, cache, cfg)
+
+    params_shapes = jax.eval_shape(lambda: init_lm(jax.random.key(0), cfg))
+    cache_shapes = jax.eval_shape(lambda: init_cache(cfg, b, capacity=s))
+    if cfg.family in ("encdec", "audio"):
+        cache_shapes = dict(cache_shapes)
+        cache_shapes["memory"] = jax.ShapeDtypeStruct(
+            (b, SRC_LEN_DECODE, cfg.d_model), cfg.dtype)
+    tok_shapes = decode_specs(cfg, b)["tokens"]
+
+    # serving layout: drop the FSDP dim when TP-sharded weights fit HBM
+    # (10 GB budget leaves room for cache + transients) — kills the
+    # per-token weight gathers (§Perf cell C)
+    from repro.distributed.sharding import serving_rules
+    import os as _os
+    tp = mesh.shape.get("model", 1)
+    no_fsdp = (cfg.param_count() * 2 / tp <= 10e9
+               and not _os.environ.get("REPRO_SERVE_FSDP"))  # ablation knob
+    params_sh = param_shardings(params_shapes, mesh,
+                                serving_rules() if no_fsdp else None)
+    cache_sh = cache_shardings(cache_shapes, mesh, batch=b)
+    tok_sh = _batch_sharding(tok_shapes, mesh)
+
+    return CellPlan(arch, shape_name, "decode", serve_step,
+                    (params_shapes, tok_shapes, cache_shapes),
+                    (params_sh, tok_sh, cache_sh),
+                    (2,), b, 2.0 * n_active * b)
+
+
+def _state_shardings(state_shapes: Dict, mesh: Mesh) -> Dict:
+    p_sh = param_shardings(state_shapes["params"], mesh)
+    out: Dict[str, Any] = {"params": p_sh,
+                           "step": _replicated(mesh)}
+    opt_shapes = state_shapes["opt"]
+    opt_sh: Dict[str, Any] = {"count": _replicated(mesh)}
+    for k in ("m", "v", "m_scale", "v_scale"):
+        if opt_shapes.get(k) is not None:
+            opt_sh[k] = shardings_like(p_sh, opt_shapes[k])
+        else:
+            opt_sh[k] = None
+    out["opt"] = opt_sh
+    if "err" in state_shapes:
+        out["err"] = shardings_like(p_sh, state_shapes["err"])
+    return out
+
+
+@dataclasses.dataclass
+class CellResult:
+    plan: CellPlan
+    report: Optional[RooflineReport]
+    compile_s: float
+    memory_stats: Optional[Dict]
+    error: Optional[str] = None
+    hlo_text: Optional[str] = None
+
+
+def _accounting_unit(cfg: ArchConfig) -> int:
+    """Smallest layer count that tiles the stack homogeneously."""
+    if cfg.family == "hybrid" and cfg.attn_every:
+        return cfg.attn_every
+    return 1
+
+
+def _accounting_cfg_overrides(cfg: ArchConfig, k_layers: int) -> Dict:
+    ov: Dict[str, Any] = {
+        "n_layers": k_layers,
+        "scan_layers": False,     # unrolled → XLA cost analysis is exact
+        "attn_unroll": True,      # chunked-attention KV scan unrolled too
+    }
+    if cfg.encoder_layers:
+        # enc/dec scale together (seamless: 12/12 → slope covers one of each)
+        ov["encoder_layers"] = max(
+            1, round(k_layers * cfg.encoder_layers / cfg.n_layers))
+    return ov
+
+
+def account_cell(arch: str, shape_name: str, mesh: Mesh, mesh_name: str, *,
+                 ts_overrides: Optional[Dict] = None,
+                 cfg_overrides: Optional[Dict] = None,
+                 keep_hlo: bool = False) -> CellResult:
+    """Full dry-run of one cell: production compile + exact accounting.
+
+    XLA cost analysis counts while-loop bodies ONCE (verified empirically),
+    so the production lowering (scan-over-layers, microbatch scan) cannot
+    provide roofline terms.  Strategy:
+
+      1. *Production compile* — scanned layers, policy microbatching,
+         donation: the fits-in-HBM proof (memory_analysis) and the artifact
+         whose in_shardings mirror the real launcher.
+      2. *Accounting compiles* — layers unrolled at depth u and 2u
+         (u = 1, or one hybrid period), microbatches=1, chunked-attention
+         KV scan unrolled: every FLOP/byte/collective visible to XLA.
+         Linear extrapolation v(L) = v(u) + (v(2u)−v(u))·(L−u)/u is exact
+         for homogeneous stacks (embed/head/optimizer live in the
+         intercept).
+
+    Documented approximations: accounting runs microbatches=1, so per-step
+    FLOPs are exact but FSDP weight re-gather traffic of additional
+    microbatches is not counted (production and hillclimb variants share
+    the convention, so deltas are comparable).
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+
+    plan_prod = plan_cell(arch, shape_name, mesh, ts_overrides=ts_overrides,
+                          cfg_overrides=cfg_overrides)
+    if plan_prod.skipped:
+        return CellResult(plan_prod, None, 0.0, None)
+    res_prod = compile_cell(plan_prod, mesh, mesh_name, keep_hlo=keep_hlo)
+
+    u = _accounting_unit(cfg)
+    acc_ts = dict(ts_overrides or {})
+    acc_ts["microbatches"] = 1
+    samples = []
+    total_compile = res_prod.compile_s
+    for k in (u, 2 * u):
+        ov = dict(cfg_overrides or {})
+        ov.update(_accounting_cfg_overrides(cfg, k))
+        plan_k = plan_cell(arch, shape_name, mesh, ts_overrides=acc_ts,
+                           cfg_overrides=ov)
+        res_k = compile_cell(plan_k, mesh, mesh_name)
+        total_compile += res_k.compile_s
+        r = res_k.report
+        samples.append({
+            "flops": r.per_device_flops,
+            "bytes": r.per_device_bytes,
+            "naive": r.collective_naive,
+            "ring": r.collective_ring,
+            "count": float(r.collective_count),
+        })
+
+    L = cfg.n_layers
+    scale = (L - u) / u
+    extr = {key: samples[0][key] + (samples[1][key] - samples[0][key]) * scale
+            for key in samples[0]}
+
+    report = dataclasses.replace(
+        res_prod.report,
+        per_device_flops=extr["flops"],
+        per_device_bytes=extr["bytes"],
+        collective_naive=extr["naive"],
+        collective_ring=extr["ring"],
+        collective_count=int(extr["count"]),
+    )
+    return CellResult(plan_prod, report, total_compile, res_prod.memory_stats,
+                      hlo_text=res_prod.hlo_text)
+
+
+def compile_cell(plan: CellPlan, mesh: Mesh, mesh_name: str,
+                 keep_hlo: bool = False) -> CellResult:
+    if plan.skipped:
+        return CellResult(plan, None, 0.0, None, error=None)
+    chips = mesh.devices.size
+    t0 = time.time()
+    jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                     donate_argnums=plan.donate)
+    with mesh, activation_mesh(mesh):
+        lowered = jitted.lower(*plan.in_shapes)
+        compiled = lowered.compile()
+    dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    report = analyze_compiled(
+        compiled, arch=plan.arch, shape=plan.shape, mesh_name=mesh_name,
+        chips=chips, mflops=plan.mflops)
+    stats = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "code_bytes": mem.generated_code_size_in_bytes,
+    }
+    return CellResult(plan, report, dt, stats,
+                      hlo_text=compiled.as_text() if keep_hlo else None)

@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell the AOT pipeline is
+    jax.jit(step, in_shardings=…, donate_argnums=…).lower(**specs).compile()
+followed by ``memory_analysis()`` (fits-per-device proof) and
+``cost_analysis()`` + HLO collective parsing (roofline terms, §Roofline).
+
+Results append to a JSONL ledger (resumable: cells already present are
+skipped unless --force).  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-v3-671b \
+      --shape train_4k --mesh single --dump-hlo experiments/hlo/
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    p.add_argument("--out", default="experiments/dryrun.jsonl")
+    p.add_argument("--dump-hlo", default=None,
+                   help="directory to write per-cell optimized HLO text")
+    p.add_argument("--force", action="store_true",
+                   help="recompile cells already in the ledger")
+    p.add_argument("--ts-override", default=None,
+                   help="JSON TrainStepConfig overrides, e.g. "
+                        '\'{"microbatches": 8}\'')
+    p.add_argument("--cfg-override", default=None,
+                   help="JSON ArchConfig overrides, e.g. "
+                        '\'{"moe_ep": true, "act_sp": true}\'')
+    p.add_argument("--tag", default="baseline",
+                   help="ledger tag (perf iterations use their own tags)")
+    p.add_argument("--no-accounting", action="store_true",
+                   help="production compile only (multi-pod shardability "
+                        "pass; roofline terms are while-undercounted)")
+    return p.parse_args(argv)
+
+
+def load_done(path):
+    done = set()
+    try:
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"], r.get("tag")))
+                except json.JSONDecodeError:
+                    continue
+    except FileNotFoundError:
+        pass
+    return done
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+
+    # heavyweight imports only after XLA_FLAGS is pinned
+    from repro.configs import SHAPES, list_archs
+    from repro.launch.cells import account_cell, compile_cell, plan_cell
+    from repro.launch.mesh import make_production_mesh
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    ts_overrides = json.loads(args.ts_override) if args.ts_override else None
+    cfg_overrides = json.loads(args.cfg_override) if args.cfg_override else None
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set() if args.force else load_done(args.out)
+    failures = 0
+
+    for multi_pod in meshes:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, mesh_name, args.tag)
+                if key in done:
+                    print(f"[skip-done] {key}")
+                    continue
+                t0 = time.time()
+                record = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                          "tag": args.tag}
+                try:
+                    plan = plan_cell(arch, shape, mesh,
+                                     ts_overrides=ts_overrides,
+                                     cfg_overrides=cfg_overrides)
+                    if plan.skipped:
+                        record["status"] = "skipped"
+                        record["reason"] = plan.skipped
+                        print(f"[skip] {arch} × {shape} × {mesh_name}: "
+                              f"{plan.skipped}")
+                    else:
+                        if args.no_accounting:
+                            res = compile_cell(plan, mesh, mesh_name,
+                                               keep_hlo=bool(args.dump_hlo))
+                        else:
+                            res = account_cell(arch, shape, mesh, mesh_name,
+                                               ts_overrides=ts_overrides,
+                                               cfg_overrides=cfg_overrides,
+                                               keep_hlo=bool(args.dump_hlo))
+                        record["status"] = "ok"
+                        record["compile_s"] = round(res.compile_s, 2)
+                        record["memory"] = res.memory_stats
+                        record["roofline"] = res.report.to_dict()
+                        if args.dump_hlo:
+                            os.makedirs(args.dump_hlo, exist_ok=True)
+                            fn = os.path.join(
+                                args.dump_hlo,
+                                f"{arch}__{shape}__{mesh_name}.hlo.txt")
+                            with open(fn, "w") as f:
+                                f.write(res.hlo_text)
+                        r = res.report
+                        per_dev_gb = (record["memory"]["argument_bytes"]
+                                      + record["memory"]["temp_bytes"]
+                                      - record["memory"]["alias_bytes"]) / 1e9
+                        print(f"[ok]   {arch} × {shape} × {mesh_name}: "
+                              f"compile {res.compile_s:.1f}s | "
+                              f"mem/dev {per_dev_gb:.2f} GB | "
+                              f"compute {r.compute_s*1e3:.2f} ms, "
+                              f"memory {r.memory_s*1e3:.2f} ms, "
+                              f"collective {r.collective_s*1e3:.2f} ms "
+                              f"→ {r.bottleneck}-bound, "
+                              f"roofline {r.roofline_fraction:.1%}")
+                except Exception as e:  # noqa: BLE001 — ledger records it
+                    failures += 1
+                    record["status"] = "error"
+                    record["error"] = f"{type(e).__name__}: {e}"
+                    record["traceback"] = traceback.format_exc()[-2000:]
+                    print(f"[FAIL] {arch} × {shape} × {mesh_name}: "
+                          f"{type(e).__name__}: {e}")
+                record["wall_s"] = round(time.time() - t0, 2)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(record) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

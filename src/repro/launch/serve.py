@@ -1,0 +1,139 @@
+"""Batched serving driver: continuous batching over decode slots.
+
+A minimal production-shaped server loop (no HTTP; requests are synthetic):
+
+  * ``capacity`` decode slots share one KV cache pytree;
+  * each step decodes one token for every active slot (single jitted
+    ``lm_decode_step`` — the decode_32k dry-run cell is exactly this step);
+  * finished requests (EOS or length budget) free their slot, the next
+    queued request is prefilled into it (per-slot cache splice), keeping
+    utilization high under mixed request lengths — continuous batching.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --requests 12 --slots 4 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", required=True)
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--requests", type=int, default=12)
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--capacity", type=int, default=96)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--seed", type=int, default=0)
+    return p.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    from repro.configs import get_config, get_reduced
+    from repro.models.lm import (
+        init_cache, init_lm, lm_decode_step, lm_forward)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if cfg.family in ("encdec", "audio"):
+        print("[serve] enc-dec serving uses the decoder path with a fixed "
+              "encoder memory; see examples/")
+    rng = np.random.default_rng(args.seed)
+    params = init_lm(jax.random.key(args.seed), cfg)
+
+    # request queue: variable prompt lengths (continuous batching exercise)
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=rng.integers(4, args.prompt_len + 1))
+               for _ in range(args.requests)]
+
+    B = args.slots
+    cache = init_cache(cfg, B, capacity=args.capacity)
+    if cfg.family in ("encdec", "audio"):
+        cache["memory"] = jnp.zeros((B, 8, cfg.d_model), cfg.dtype)
+
+    step = jax.jit(lambda p, t, c: lm_decode_step(p, t, c, cfg))
+
+    slot_req = [-1] * B          # request id per slot
+    slot_remaining = [0] * B
+    cur_tok = np.zeros((B, 1), np.int32)
+    next_req = 0
+    done = 0
+    outputs = {i: [] for i in range(args.requests)}
+    t0 = time.time()
+    steps = 0
+
+    def assign(slot):
+        """Prefill a queued request into a free slot (sequential feed)."""
+        nonlocal next_req, cache, cur_tok
+        if next_req >= args.requests:
+            slot_req[slot] = -1
+            return
+        rid = next_req
+        next_req += 1
+        prompt = prompts[rid]
+        # reset this slot's cache position, then feed the prompt token by
+        # token through the shared decode step (slot-masked batch)
+        pos = np.asarray(cache["pos"])
+        pos[slot] = 0
+        cache["pos"] = jnp.asarray(pos)
+        for tok in prompt[:-1]:
+            t = np.array(cur_tok)
+            t[slot, 0] = tok
+            _, c2 = step(params, jnp.asarray(t), cache)
+            cache = _splice_slot(cache, c2, slot)
+        cur_tok[slot, 0] = prompt[-1]
+        slot_req[slot] = rid
+        slot_remaining[slot] = args.max_new
+
+    def _splice_slot(old, new, slot):
+        """Take slot ``slot``'s entries from ``new``, others from ``old``."""
+        def pick(o, n):
+            if o.ndim == 0:
+                return n
+            # slot batch dim position differs per leaf family
+            for axis in range(o.ndim):
+                if o.shape[axis] == B and (o.ndim == 1 or axis <= 2):
+                    idx = [slice(None)] * o.ndim
+                    idx[axis] = slot
+                    return o.at[tuple(idx)].set(n[tuple(idx)])
+            return n
+        return jax.tree.map(pick, old, new)
+
+    for slot in range(B):
+        assign(slot)
+
+    while done < args.requests:
+        logits, cache = step(params, jnp.asarray(cur_tok), cache)
+        steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        for slot in range(B):
+            rid = slot_req[slot]
+            if rid < 0:
+                continue
+            outputs[rid].append(int(nxt[slot]))
+            cur_tok[slot, 0] = nxt[slot]
+            slot_remaining[slot] -= 1
+            if slot_remaining[slot] <= 0:
+                done += 1
+                assign(slot)
+
+    dt = time.time() - t0
+    total_new = sum(len(v) for v in outputs.values())
+    print(f"[serve] {args.requests} requests, {total_new} tokens in "
+          f"{dt:.1f}s ({total_new / dt:.1f} tok/s, {steps} batched steps, "
+          f"slot efficiency {total_new / (steps * B):.0%})")
+    for rid in range(min(3, args.requests)):
+        print(f"  req{rid}: {outputs[rid][:8]}…")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,1 @@
+"""Model zoo: GNNs (paper e2e case) + the assigned LM architecture family."""

@@ -1,0 +1,19 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware)."""
+
+from .analysis import (
+    HW_V5E,
+    HardwareSpec,
+    RooflineReport,
+    analyze_compiled,
+    collective_bytes_from_hlo,
+    model_flops,
+)
+
+__all__ = [
+    "HW_V5E",
+    "HardwareSpec",
+    "RooflineReport",
+    "analyze_compiled",
+    "collective_bytes_from_hlo",
+    "model_flops",
+]

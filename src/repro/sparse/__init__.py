@@ -1,0 +1,19 @@
+"""Sparse data pipeline: synthetic graph generators and dataset presets."""
+
+from .graphs import (
+    DATASET_PRESETS,
+    GraphData,
+    erdos_renyi_graph,
+    gcn_normalized,
+    make_dataset,
+    power_law_graph,
+)
+
+__all__ = [
+    "DATASET_PRESETS",
+    "GraphData",
+    "erdos_renyi_graph",
+    "gcn_normalized",
+    "make_dataset",
+    "power_law_graph",
+]

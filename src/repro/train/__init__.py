@@ -1,0 +1,15 @@
+"""Training substrate: optimizer, grad compression, step builder, checkpoints."""
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .train_step import TrainStepConfig, init_train_state, make_train_step
+from .checkpoint import CheckpointManager
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "TrainStepConfig",
+    "init_train_state",
+    "make_train_step",
+    "CheckpointManager",
+]

@@ -1,0 +1,164 @@
+"""Self-contained sharded checkpoint store (fault-tolerance substrate).
+
+Design goals (DESIGN.md §6):
+  * mesh-agnostic — leaves are stored as *global logical arrays* (raw bytes
+    + dtype/shape manifest), never device layouts, so a checkpoint written
+    on a (16,16) mesh restores onto (2,16,16) or a degraded mesh unchanged
+    (distributed/elastic.py does the re-lay);
+  * atomic — a step directory is staged under ``<dir>/.tmp-<step>`` and
+    ``os.replace``-d into place, so a crash mid-write never corrupts the
+    latest checkpoint; restore always reads the newest *complete* step;
+  * bounded — ``keep_n`` old steps are pruned after each successful save;
+  * non-blocking — ``save_async`` hands the host copy to a writer thread so
+    the train loop overlaps checkpoint IO with the next steps.
+
+bf16 and other ml_dtypes are stored via raw buffers (npz can't hold them).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+
+_STEP_RE = re.compile(r"^step_(\d{10})$")
+
+
+def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def save_pytree(tree: Any, directory: str) -> None:
+    """Write every leaf as raw bytes + a JSON manifest into ``directory``."""
+    os.makedirs(directory, exist_ok=True)
+    manifest: Dict[str, Dict] = {}
+    for i, (path, leaf) in enumerate(_leaf_paths(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.bin"
+        with open(os.path.join(directory, fname), "wb") as f:
+            f.write(arr.tobytes())
+        manifest[path] = {
+            "file": fname,
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+        }
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def _np_dtype(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # registered custom dtypes (bfloat16, fp8, ...)
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def load_pytree(directory: str, like: Any) -> Any:
+    """Restore a pytree with the same structure as ``like`` (arrays or
+    ShapeDtypeStructs)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like = _leaf_paths(like)
+    leaves = []
+    for path, ref in flat_like:
+        if path not in manifest:
+            raise KeyError(f"checkpoint missing leaf {path!r}")
+        meta = manifest[path]
+        with open(os.path.join(directory, meta["file"]), "rb") as f:
+            buf = f.read()
+        arr = np.frombuffer(buf, dtype=_np_dtype(meta["dtype"])).reshape(
+            meta["shape"]).copy()
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Atomic, pruned, optionally-async checkpoint directory manager."""
+
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.directory = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- paths --
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.directory, name,
+                                                 "manifest.json")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -------------------------------------------------------------- save --
+
+    def save(self, state: Any, step: int) -> None:
+        tmp = os.path.join(self.directory, f".tmp-{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        save_pytree(state, tmp)
+        final = self._step_dir(step)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._prune()
+
+    def save_async(self, state: Any, step: int) -> None:
+        """Host-copy now, write in the background (overlaps with training)."""
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self.save, args=(host_state, step), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _prune(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep_n] if self.keep_n else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ----------------------------------------------------------- restore --
+
+    def restore(self, like: Any, step: Optional[int] = None) -> Tuple[Any, int]:
+        """Restore ``step`` (default: latest). Returns (state, step)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        return load_pytree(self._step_dir(step), like), step

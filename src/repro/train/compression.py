@@ -1,0 +1,134 @@
+"""Gradient compression for the DP all-reduce, with error feedback.
+
+At 1000+-node scale the data-parallel gradient reduction is the dominant
+cross-pod collective.  Two compressors:
+
+  int8   per-block absmax quantization — 4× less DP traffic, unbiased-ish
+  topk   magnitude top-k per tensor (k as a fraction) — sparse traffic
+
+Both carry an *error-feedback* buffer e_t: the residual of what compression
+dropped is added back into the next step's gradient, which is the standard
+convergence-preserving construction (Karimireddy et al., 2019).
+
+The compressors are pure (jit-able) and mesh-agnostic: ``compress`` maps a
+gradient pytree → (compressed pytree, new error pytree); the caller reduces
+the compressed representation (psum / all-gather under shard_map) and then
+``decompress``-es.  ``compressed_ratio`` reports the traffic saving used in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionConfig", "init_error", "compress_int8",
+           "decompress_int8", "compress_topk", "decompress_topk",
+           "compressed_bytes", "raw_bytes"]
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "int8"       # "int8" | "topk" | "none"
+    block: int = 256
+    topk_frac: float = 0.05
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
+
+
+# ------------------------------------------------------------------- int8 --
+
+
+def _q_leaf(x: jax.Array, block: int):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    xp = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(xp), axis=-1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def _dq_leaf(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    x = (q.astype(f32) * scale[:, None]).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return x[:size].reshape(shape)
+
+
+def compress_int8(grads: Any, err: Any, cfg: CompressionConfig
+                  ) -> Tuple[Any, Any]:
+    """→ (compressed {q, scale, shape} per leaf, new error buffers)."""
+
+    def leaf(g, e):
+        corrected = g.astype(f32) + e
+        q, scale = _q_leaf(corrected, cfg.block)
+        g_hat = _dq_leaf(q, scale, g.shape)
+        return {"q": q, "scale": scale}, corrected - g_hat
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return comp, new_err
+
+
+def decompress_int8(comp: Any, like: Any) -> Any:
+    return jax.tree.map(
+        lambda c, g: _dq_leaf(c["q"], c["scale"], g.shape),
+        comp, like, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+# ------------------------------------------------------------------- topk --
+
+
+def compress_topk(grads: Any, err: Any, cfg: CompressionConfig
+                  ) -> Tuple[Any, Any]:
+    def leaf(g, e):
+        corrected = (g.astype(f32) + e).reshape(-1)
+        k = max(int(corrected.shape[0] * cfg.topk_frac), 1)
+        vals, idx = jax.lax.top_k(jnp.abs(corrected), k)
+        sel = corrected[idx]
+        g_hat = jnp.zeros_like(corrected).at[idx].set(sel)
+        return ({"idx": idx.astype(jnp.int32), "val": sel},
+                (corrected - g_hat).reshape(g.shape))
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return comp, new_err
+
+
+def decompress_topk(comp: Any, like: Any) -> Any:
+    def leaf(c, g):
+        size = 1
+        for s in g.shape:
+            size *= s
+        return jnp.zeros((size,), f32).at[c["idx"]].set(c["val"]).reshape(g.shape)
+
+    return jax.tree.map(leaf, comp, like,
+                        is_leaf=lambda x: isinstance(x, dict) and "idx" in x)
+
+
+# ---------------------------------------------------------------- account --
+
+
+def raw_bytes(grads: Any) -> int:
+    return sum(l.size * 4 for l in jax.tree.leaves(grads))
+
+
+def compressed_bytes(comp: Any) -> int:
+    total = 0
+    for l in jax.tree.leaves(comp):
+        total += l.size * l.dtype.itemsize
+    return total

@@ -1,0 +1,180 @@
+"""AdamW with optional block-quantized (int8) moment state.
+
+Self-contained (no optax): the 8-bit state path is what makes the 671B
+config's optimizer fit a v5e pod (DESIGN.md §6).  Moments are stored int8
+with a per-block f32 absmax scale (block = last-dim groups of
+``quant_block``); quantize/dequantize happen inside the update, so the
+optimizer math itself runs in f32.
+
+State layout (a dict so checkpoints / resharding stay structural):
+  {"m": pytree, "v": pytree, "m_scale": pytree|None, "v_scale": pytree|None,
+   "count": scalar int32}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update"]
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_state: bool = False   # int8 moments (8-bit Adam)
+    quant_block: int = 256
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+# ----------------------------------------------------------- quantization --
+
+
+def _quant_shape(shape: Tuple[int, ...], block: int) -> Tuple[int, ...]:
+    last = max(shape[-1] if shape else 1, 1)
+    return tuple(shape[:-1]) + (-(-last // block),)
+
+
+def _quantize(x: jax.Array, block: int) -> Tuple[jax.Array, jax.Array]:
+    """f32 → (int8 same shape as x, f32 per-block scale).
+
+    The last dim is zero-padded to a block multiple internally; the stored
+    int8 tensor keeps the original (unpadded) shape so it matches the
+    param's sharding exactly.
+    """
+    if x.ndim == 0:
+        scale = jnp.maximum(jnp.abs(x), 1e-12) / 127.0
+        return jnp.round(x / scale).astype(jnp.int8), scale
+    last = x.shape[-1]
+    pad = (-last) % block
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(x.shape[:-1] + (-1, block))
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    q = q.reshape(xp.shape)[..., :last]
+    return q, scale[..., 0]
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, orig_last: int,
+                block: int) -> jax.Array:
+    if q.ndim == 0:
+        return q.astype(f32) * scale
+    last = q.shape[-1]
+    pad = (-last) % block
+    qp = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    qb = qp.reshape(q.shape[:-1] + (-1, block)).astype(f32)
+    xb = qb * scale[..., None]
+    return xb.reshape(qp.shape)[..., :orig_last]
+
+
+# ------------------------------------------------------------------ adamw --
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> dict:
+    if cfg.quantize_state:
+        def zeros_q(p):
+            return jnp.zeros(p.shape, jnp.int8)
+
+        def zeros_s(p):
+            if p.ndim == 0:
+                return jnp.zeros((), f32)
+            return jnp.zeros(_quant_shape(p.shape, cfg.quant_block), f32)
+
+        return {
+            "m": jax.tree.map(zeros_q, params),
+            "v": jax.tree.map(zeros_q, params),
+            "m_scale": jax.tree.map(zeros_s, params),
+            "v_scale": jax.tree.map(zeros_s, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    zeros = lambda p: jnp.zeros(p.shape, f32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "m_scale": None,
+        "v_scale": None,
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_ratio."""
+    step = step.astype(f32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(f32))) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(grads: Any, opt: dict, params: Any, cfg: AdamWConfig
+                 ) -> Tuple[Any, dict, dict]:
+    """One AdamW step. Returns (new_params, new_opt, metrics)."""
+    count = opt["count"] + 1
+    lr = lr_schedule(cfg, count)
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** count.astype(f32)
+    bc2 = 1 - b2 ** count.astype(f32)
+
+    def leaf_update(g, p, m, v, ms, vs):
+        g = g.astype(f32) * clip
+        if cfg.quantize_state:
+            m_f = _dequantize(m, ms, p.shape[-1] if p.ndim else 1, cfg.quant_block)
+            v_f = _dequantize(v, vs, p.shape[-1] if p.ndim else 1, cfg.quant_block)
+        else:
+            m_f, v_f = m, v
+        m_f = b1 * m_f + (1 - b1) * g
+        v_f = b2 * v_f + (1 - b2) * g * g
+        upd = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
+        wd = cfg.weight_decay * p.astype(f32) if p.ndim >= 2 else 0.0
+        new_p = (p.astype(f32) - lr * (upd + wd)).astype(p.dtype)
+        if cfg.quantize_state:
+            mq, msn = _quantize(m_f, cfg.quant_block)
+            vq, vsn = _quantize(v_f, cfg.quant_block)
+            return new_p, mq, vq, msn, vsn
+        return new_p, m_f, v_f, None, None
+
+    leaves_g = jax.tree.leaves(grads)
+    leaves_p, treedef = jax.tree_util.tree_flatten(params)
+    leaves_m = jax.tree.leaves(opt["m"])
+    leaves_v = jax.tree.leaves(opt["v"])
+    leaves_ms = (jax.tree.leaves(opt["m_scale"]) if cfg.quantize_state
+                 else [None] * len(leaves_p))
+    leaves_vs = (jax.tree.leaves(opt["v_scale"]) if cfg.quantize_state
+                 else [None] * len(leaves_p))
+
+    outs = [leaf_update(g, p, m, v, ms, vs) for g, p, m, v, ms, vs in
+            zip(leaves_g, leaves_p, leaves_m, leaves_v, leaves_ms, leaves_vs)]
+
+    unflat = lambda i: jax.tree_util.tree_unflatten(treedef, [o[i] for o in outs])
+    new_params = unflat(0)
+    new_opt = {
+        "m": unflat(1),
+        "v": unflat(2),
+        "m_scale": unflat(3) if cfg.quantize_state else None,
+        "v_scale": unflat(4) if cfg.quantize_state else None,
+        "count": count,
+    }
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_opt, metrics

@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests: REDUCED configs, one forward + train step
++ decode step on CPU, asserting shapes and finiteness."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_reduced, list_archs
+from repro.models.lm import (
+    init_cache,
+    init_lm,
+    lm_decode_step,
+    lm_forward,
+    lm_loss,
+)
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab)}
+    if cfg.family in ("encdec", "audio"):
+        batch["src_embeds"] = jax.random.normal(k2, (B, S, cfg.d_model))
+    if cfg.family == "vlm" and cfg.prefix_len:
+        batch["prefix_embeds"] = jax.random.normal(
+            k3, (B, cfg.prefix_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_smoke(arch):
+    cfg = get_reduced(arch)
+    params = init_lm(jax.random.key(0), cfg)
+    batch = make_batch(cfg, jax.random.key(1))
+    logits, aux = jax.jit(lambda p, b: lm_forward(p, b, cfg))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_smoke(arch):
+    cfg = get_reduced(arch)
+    params = init_lm(jax.random.key(0), cfg)
+    batch = make_batch(cfg, jax.random.key(1))
+
+    @jax.jit
+    def step(p, b):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda pp: lm_loss(pp, b, cfg), has_aux=True)(p)
+        p2 = jax.tree.map(lambda w, g: w - 1e-3 * g.astype(w.dtype), p, grads)
+        return loss, p2
+
+    loss, params2 = step(params, batch)
+    assert np.isfinite(float(loss))
+    # params actually changed
+    delta = jax.tree.leaves(jax.tree.map(
+        lambda a, b_: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                            - b_.astype(jnp.float32)))),
+        params, params2))
+    assert max(delta) > 0
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_step_smoke(arch):
+    cfg = get_reduced(arch)
+    params = init_lm(jax.random.key(0), cfg)
+    cache = init_cache(cfg, B, capacity=16)
+    if cfg.family in ("encdec", "audio"):
+        cache["memory"] = jax.random.normal(
+            jax.random.key(2), (B, 8, cfg.d_model)).astype(cfg.dtype)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache = jax.jit(
+        lambda p, t, c: lm_decode_step(p, t, c, cfg))(params, tok, cache)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert int(cache["pos"][0]) == 1
+    # second step advances
+    logits, cache = jax.jit(
+        lambda p, t, c: lm_decode_step(p, t, c, cfg))(params, tok, cache)
+    assert int(cache["pos"][0]) == 2
+
+
+def test_full_configs_exact():
+    """The full configs carry the exact assigned hyperparameters."""
+    c = ARCHS["deepseek-v3-671b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab) == (61, 7168, 128, 129280)
+    assert (c.moe_experts, c.moe_top_k, c.moe_shared_experts) == (256, 8, 1)
+    c = ARCHS["granite-3-2b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (40, 2048, 32, 8, 8192, 49155)
+    c = ARCHS["mamba2-2.7b"]
+    assert (c.n_layers, c.d_model, c.ssm_state, c.vocab) == (64, 2560, 128, 50280)
+    c = ARCHS["zamba2-1.2b"]
+    assert (c.n_layers, c.d_model, c.ssm_state) == (38, 2048, 64)
+    c = ARCHS["qwen3-0.6b"]
+    assert c.qk_norm and (c.n_layers, c.d_model, c.vocab) == (28, 1024, 151936)
+    c = ARCHS["yi-9b"]
+    assert (c.n_layers, c.n_kv_heads, c.d_ff, c.vocab) == (48, 4, 11008, 64000)
+    c = ARCHS["internvl2-76b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff) == \
+        (80, 8192, 64, 8, 28672)
+    c = ARCHS["seamless-m4t-medium"]
+    assert (c.n_layers, c.d_model, c.vocab) == (12, 1024, 256206)
+    c = ARCHS["moonshot-v1-16b-a3b"]
+    assert (c.moe_experts, c.moe_top_k, c.d_ff) == (64, 6, 1408)
+    c = ARCHS["granite-8b"]
+    assert (c.n_layers, c.d_model, c.d_ff) == (36, 4096, 14336)
+
+
+def test_param_counts_plausible():
+    """Analytic param counts are in the advertised ballpark."""
+    assert 500e9 < ARCHS["deepseek-v3-671b"].param_count() < 800e9
+    assert 1.5e9 < ARCHS["granite-3-2b"].param_count() < 4e9
+    assert 6e9 < ARCHS["granite-8b"].param_count() < 10e9
+    assert 7e9 < ARCHS["yi-9b"].param_count() < 11e9
+    assert 0.4e9 < ARCHS["qwen3-0.6b"].param_count() < 1.0e9
+    # the assigned 48L config computes above the name-plate 16B — the brief's
+    # hyperparameters are authoritative, the analytic count just tracks them
+    assert 12e9 < ARCHS["moonshot-v1-16b-a3b"].param_count() < 35e9
+    assert 2e9 < ARCHS["mamba2-2.7b"].param_count() < 3.5e9
+    assert 60e9 < ARCHS["internvl2-76b"].param_count() < 90e9
+    # MoE active ≪ total
+    ds = ARCHS["deepseek-v3-671b"]
+    assert ds.active_param_count() < 0.1 * ds.param_count()

@@ -1,0 +1,94 @@
+"""ME-BCRS format: round-trip, blocking, memory accounting (property-based)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    block_format,
+    from_coo,
+    from_dense,
+    memory_footprint_me_bcrs,
+    memory_footprint_sr_bcrs,
+    to_dense,
+)
+
+
+def random_sparse(rng, m, k, density):
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    a *= rng.random((m, k)) < density
+    return a
+
+
+@pytest.mark.parametrize("v", [4, 8, 16, 32])
+@pytest.mark.parametrize("m,k", [(8, 8), (64, 64), (100, 37), (3, 130)])
+def test_round_trip(v, m, k):
+    rng = np.random.default_rng(0)
+    a = random_sparse(rng, m, k, 0.2)
+    fmt = from_dense(a, vector_size=v)
+    np.testing.assert_allclose(np.asarray(to_dense(fmt)), a, rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    v=st.sampled_from([8, 16]),
+    density=st.floats(0.0, 0.6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_round_trip_property(m, k, v, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_sparse(rng, m, k, density)
+    fmt = from_dense(a, vector_size=v)
+    np.testing.assert_allclose(np.asarray(to_dense(fmt)), a, rtol=1e-6)
+    # invariants
+    rp = np.asarray(fmt.row_pointers)
+    assert rp[0] == 0 and rp[-1] == fmt.nnzv
+    assert np.all(np.diff(rp) >= 0)
+    assert fmt.nnz == int((a != 0).sum())
+
+
+def test_from_coo_duplicates_summed():
+    rows = np.array([0, 0, 5, 5])
+    cols = np.array([1, 1, 2, 2])
+    vals = np.array([1.0, 2.0, 3.0, 4.0], dtype=np.float32)
+    fmt = from_coo(rows, cols, vals, (8, 4), vector_size=8)
+    dense = np.asarray(to_dense(fmt))
+    assert dense[0, 1] == 3.0 and dense[5, 2] == 7.0
+    assert fmt.nnzv == 2  # both rows fall into the same window's two vectors
+
+
+@pytest.mark.parametrize("k_blk", [4, 8, 16])
+def test_blocked_view_consistency(k_blk):
+    rng = np.random.default_rng(1)
+    a = random_sparse(rng, 60, 45, 0.15)
+    fmt = from_dense(a, vector_size=8)
+    blocked = block_format(fmt, k_blk=k_blk)
+    assert blocked.vals.shape[0] == blocked.num_blocks * k_blk
+    # block_win is nondecreasing (windows contiguous), padding rows are zero
+    bw = np.asarray(blocked.block_win)
+    assert np.all(np.diff(bw) >= 0)
+    vals = np.asarray(blocked.vals)
+    mask = np.asarray(blocked.mask)
+    assert np.all(vals[~mask.any(axis=1)] == 0)
+
+
+def test_empty_matrix():
+    fmt = from_dense(np.zeros((16, 16), np.float32), vector_size=8)
+    assert fmt.nnzv == 0
+    blocked = block_format(fmt, k_blk=8)
+    assert blocked.num_blocks == 1  # dummy block so kernels stay launchable
+    np.testing.assert_array_equal(np.asarray(to_dense(fmt)), 0)
+
+
+def test_memory_footprint_me_vs_sr():
+    # Sparse matrix with many windows holding non-multiple-of-8 vector counts
+    rng = np.random.default_rng(2)
+    a = random_sparse(rng, 256, 256, 0.02)
+    fmt = from_dense(a, vector_size=8)
+    me = memory_footprint_me_bcrs(fmt)
+    sr = memory_footprint_sr_bcrs(fmt, k=8)
+    assert me < sr  # ME-BCRS always at most SR-BCRS (paper Table 7)

@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import block_format, from_dense, spmm_blocked, sddmm_blocked
+from repro.kernels import ops, ref
+
+
+def random_sparse(rng, m, k, density):
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    a *= rng.random((m, k)) < density
+    return a
+
+
+def make_blocked(rng, m, k, density, v=8, k_blk=8):
+    a = random_sparse(rng, m, k, density)
+    return a, block_format(from_dense(a, vector_size=v), k_blk=k_blk)
+
+
+# ---------------------------------------------------------------- SpMM ----
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("v,k_blk", [(8, 8), (8, 16), (16, 8), (8, 32)])
+@pytest.mark.parametrize("m,k,n", [(64, 64, 128), (100, 57, 64), (16, 200, 256)])
+def test_spmm_pallas_vs_ref(dtype, v, k_blk, m, k, n):
+    rng = np.random.default_rng(0)
+    a, blocked = make_blocked(rng, m, k, 0.15, v=v, k_blk=k_blk)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype=dtype)
+    out = ops.spmm(blocked, b, interpret=True)
+    expected = ref.spmm_ref(blocked, b)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("n_blk", [32, 128])
+def test_spmm_pallas_vs_dense(n_blk):
+    rng = np.random.default_rng(1)
+    a, blocked = make_blocked(rng, 96, 80, 0.2)
+    b = jnp.asarray(rng.standard_normal((80, 96)), dtype=jnp.float32)
+    out = ops.spmm(blocked, b, n_blk=n_blk, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), a @ np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_spmm_pallas_matches_core_blocked():
+    rng = np.random.default_rng(2)
+    a, blocked = make_blocked(rng, 72, 72, 0.1)
+    b = jnp.asarray(rng.standard_normal((72, 48)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.spmm(blocked, b, interpret=True)),
+        np.asarray(spmm_blocked(blocked, b)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_spmm_noncoalesced_same_result():
+    rng = np.random.default_rng(3)
+    a, blocked = make_blocked(rng, 40, 64, 0.2)
+    b = jnp.asarray(rng.standard_normal((64, 32)), dtype=jnp.float32)
+    out_c = ops.spmm(blocked, b, interpret=True)
+    out_nc = ops.spmm_noncoalesced(blocked, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_nc),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    density=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmm_pallas_property(m, k, n, density, seed):
+    rng = np.random.default_rng(seed)
+    a, blocked = make_blocked(rng, m, k, density)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype=jnp.float32)
+    out = ops.spmm(blocked, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), a @ np.asarray(b),
+                               rtol=5e-4, atol=5e-4)
+
+
+# --------------------------------------------------------------- SDDMM ----
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("v,k_blk", [(8, 8), (16, 8), (8, 32)])
+@pytest.mark.parametrize("m,mc,f", [(64, 64, 128), (50, 70, 32), (16, 128, 300)])
+def test_sddmm_pallas_vs_ref(dtype, v, k_blk, m, mc, f):
+    rng = np.random.default_rng(4)
+    _, blocked = make_blocked(rng, m, mc, 0.15, v=v, k_blk=k_blk)
+    q = jnp.asarray(rng.standard_normal((m, f)), dtype=dtype)
+    kk = jnp.asarray(rng.standard_normal((mc, f)), dtype=dtype)
+    out = ops.sddmm(blocked, q, kk, interpret=True)
+    expected = ref.sddmm_ref(blocked, q, kk)
+    # bf16 oracle accumulates in bf16 while the kernel accumulates in f32 →
+    # tolerance scales with sqrt(F)·eps_bf16.
+    rtol, atol = (1e-4, 1e-4) if dtype == jnp.float32 else (5e-2, 2e-1)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        rtol=rtol, atol=atol,
+    )
+
+
+def test_sddmm_pallas_matches_core():
+    rng = np.random.default_rng(5)
+    _, blocked = make_blocked(rng, 48, 48, 0.2)
+    q = jnp.asarray(rng.standard_normal((48, 64)), dtype=jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((48, 64)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.sddmm(blocked, q, kk, interpret=True)),
+        np.asarray(sddmm_blocked(blocked, q, kk)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    mc=st.integers(1, 40),
+    f=st.integers(1, 40),
+    density=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sddmm_pallas_property(m, mc, f, density, seed):
+    rng = np.random.default_rng(seed)
+    _, blocked = make_blocked(rng, m, mc, density)
+    q = jnp.asarray(rng.standard_normal((m, f)), dtype=jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((mc, f)), dtype=jnp.float32)
+    out = ops.sddmm(blocked, q, kk, interpret=True)
+    expected = ref.sddmm_ref(blocked, q, kk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=5e-4, atol=5e-4)

@@ -1,0 +1,68 @@
+"""Roofline analysis: HLO collective parsing + report math."""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.roofline.analysis import (
+    HW_V5E, RooflineReport, collective_bytes_from_hlo, model_flops)
+
+HLO_SAMPLE = """
+HloModule test
+%ag = bf16[16,8192]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+%ar = f32[256]{0} all-reduce(%y), channel_id=2, replica_groups=[16,16]<=[256], to_apply=%add
+%rs = f32[64,32]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[4,8]<=[32], dimensions={0}
+%cp-start = bf16[128]{0} collective-permute-start(%w), channel_id=4, source_target_pairs={{0,1},{1,2}}
+%cp-done = bf16[128]{0} collective-permute-done(%cp-start)
+%notacoll = f32[10]{0} add(%a, %b)
+"""
+
+
+def test_collective_parsing():
+    out = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert out["count"] == 4  # -done not double counted
+    # all-gather: result 16*8192*2 B, g=16 → moved = result * 15/16
+    ag = 16 * 8192 * 2
+    ar = 256 * 4
+    rs_operand = 64 * 32 * 4 * 8  # result × group
+    cp = 128 * 2
+    assert abs(out["all-gather"] - ag * 15 / 16) < 1
+    assert abs(out["all-reduce"] - 2 * ar * 15 / 16) < 1
+    assert abs(out["reduce-scatter"] - rs_operand * 7 / 8) < 1
+    assert abs(out["collective-permute"] - cp) < 1
+    naive = ag / 16 + ar + rs_operand + cp
+    assert abs(out["naive"] - naive) < 1
+
+
+def test_report_terms_and_bottleneck():
+    r = RooflineReport(
+        arch="x", shape="train_4k", mesh="pod16x16", chips=256,
+        per_device_flops=197e12 * 0.010,        # 10 ms compute
+        per_device_bytes=819e9 * 0.050,          # 50 ms memory
+        collective_naive=1e9,
+        collective_ring=50e9 * 0.020,            # 20 ms collective
+        collective_count=10,
+        peak_mem_bytes=8e9, arg_bytes=4e9,
+        model_flops_total=197e12 * 0.010 * 256 * 0.5,  # half the HLO flops
+    )
+    assert abs(r.compute_s - 0.010) < 1e-9
+    assert abs(r.memory_s - 0.050) < 1e-9
+    assert abs(r.collective_s - 0.020) < 1e-9
+    assert r.bottleneck == "memory"
+    assert abs(r.step_time_s - 0.050) < 1e-9
+    assert abs(r.useful_flops_ratio - 0.5) < 1e-9
+    # roofline fraction: useful flops over what peak compute could do in
+    # the modeled step time = 0.5 * (10ms/50ms)
+    assert abs(r.roofline_fraction - 0.1) < 1e-9
+
+
+def test_model_flops_moe_counts_active():
+    ds = get_config("deepseek-v3-671b")
+    dense_equiv = 6.0 * ds.param_count() * 1000
+    active = model_flops(ds, 1000)
+    assert active < 0.1 * dense_equiv  # top-8 of 256 experts
+
+
+def test_hw_constants():
+    assert HW_V5E.peak_flops == 197e12
+    assert HW_V5E.hbm_bw == 819e9
+    assert HW_V5E.ici_bw == 50e9

@@ -1,0 +1,51 @@
+"""Vocab padding (TP-shardability) must be numerically invisible."""
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.models.lm import init_lm, lm_forward, lm_loss
+
+
+def test_padded_vocab_loss_exact():
+    """CE over padded logits (pad cols = −∞) == CE over the true vocab."""
+    cfg = get_reduced("granite-3-2b", vocab=500)   # pads to 512
+    assert cfg.padded_vocab == 512
+    params = init_lm(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    batch = {"tokens": tokens}
+
+    logits, _ = lm_forward(params, batch, cfg)
+    assert logits.shape[-1] == 512
+    # pad columns are -inf-ish
+    assert float(jnp.max(logits[..., cfg.vocab:])) < -1e29
+
+    total, parts = lm_loss(params, batch, cfg)
+
+    # brute-force CE on the sliced true-vocab logits
+    sl = logits[:, :-1, : cfg.vocab].astype(jnp.float32)
+    tg = tokens[:, 1:]
+    logp = jax.nn.log_softmax(sl, axis=-1)
+    nll = -jnp.take_along_axis(logp, tg[..., None], axis=-1)[..., 0]
+    ref = float(jnp.mean(nll))
+    np.testing.assert_allclose(float(parts["ce"]), ref, rtol=1e-5)
+
+
+def test_decode_never_samples_pad():
+    cfg = get_reduced("granite-3-2b", vocab=500)
+    params = init_lm(jax.random.key(0), cfg)
+    logits, _ = lm_forward(params, {"tokens": jnp.zeros((2, 4), jnp.int32)},
+                           cfg)
+    picks = jnp.argmax(logits, axis=-1)
+    assert int(jnp.max(picks)) < cfg.vocab
+
+
+def test_aligned_vocab_not_padded():
+    cfg = get_reduced("granite-3-2b", vocab=512)
+    assert cfg.padded_vocab == 512
+    params = init_lm(jax.random.key(0), cfg)
+    assert params["embed"].shape[0] == 512
