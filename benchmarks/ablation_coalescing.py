@@ -1,11 +1,14 @@
 """Paper Fig. 15 ablation: coalesced vs non-coalesced dense-row access.
 
 GPU version: memory-efficient thread mapping (2×2 register blocks → 32 B
-transactions).  TPU translation (DESIGN.md §2): blocked-contiguous staging
-gather vs per-row dynamic-slice DMA in the Pallas kernel.  Both variants
-compute identical results (asserted); the structural difference is the DMA
-granularity, timed here through the interpret-mode kernels and measured
-exactly as DMA-transaction counts.
+transactions).  TPU translation (DESIGN.md §2–§3): both variants are the
+gather-free fused kernel; the coalesced path batches each K-block's row
+DMAs and double-buffers them against compute, while the non-coalesced
+path issues one serialized fetch-wait per dense row with no overlap — the
+structural analogue of the strided per-thread access penalty.  Both
+variants compute bitwise-identical results (asserted); the difference is
+copy scheduling, timed through the interpret-mode kernels and measured
+exactly as DMA-issue counts.
 """
 
 from __future__ import annotations
@@ -20,16 +23,19 @@ from .common import geomean, suite, time_fn, write_csv
 
 
 def dma_transactions(blocked, n_cols: int) -> dict:
-    """DMA count model: coalesced stages (K_BLK, N) tiles; non-coalesced
-    issues one (1, N) DMA per dense row (the strided-access analogue)."""
+    """DMA issue model: the coalesced path issues one batched, overlapped
+    copy group per K-block; the non-coalesced path serializes one
+    fetch-wait round trip per dense row (the strided-access analogue)."""
     nb = blocked.num_blocks
-    coalesced = nb  # one staged tile per K-block
-    noncoal = blocked.cols.shape[0]  # one row DMA per vector
-    return {"coalesced": int(coalesced), "noncoalesced": int(noncoal)}
+    coalesced = nb  # one in-flight batch per K-block (vals + rows together)
+    # serialized path: one round trip per dense row plus the vals copy of
+    # each K-block (the kernel start+waits every copy individually)
+    noncoal = int(blocked.cols.shape[0]) + nb
+    return {"coalesced": int(coalesced), "noncoalesced": noncoal}
 
 
-def run(scale: float = 0.01, n_cols: int = 128, time_kernels: bool = True,
-        verbose: bool = True):
+def run(scale: float = 0.01, n_cols: int = 128, time_kernels: bool = False,
+        verbose: bool = True, check_parity: bool = True):
     rows = []
     rng = np.random.default_rng(0)
     for g in suite(scale):
@@ -45,11 +51,17 @@ def run(scale: float = 0.01, n_cols: int = 128, time_kernels: bool = True,
             "dma_noncoalesced": dma["noncoalesced"],
             "dma_reduction": 1 - dma["coalesced"] / max(dma["noncoalesced"], 1),
         }
-        if time_kernels:
+        if check_parity:
             out_c = ops.spmm(blocked, b)
             out_n = ops.spmm_noncoalesced(blocked, b)
             np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_n),
                                        rtol=1e-5, atol=1e-5)
+        if time_kernels:
+            # Interpret mode executes both variants' copies synchronously,
+            # so wall time does NOT reflect the scheduling difference — it
+            # only sanity-checks that both paths run.  The DMA-issue counts
+            # above are the structural metric; real timing needs a TPU
+            # (interpret=False).
             entry["ms_coalesced"] = time_fn(lambda: ops.spmm(blocked, b),
                                             reps=3, warmup=1)
             entry["ms_noncoalesced"] = time_fn(
@@ -61,15 +73,18 @@ def run(scale: float = 0.01, n_cols: int = 128, time_kernels: bool = True,
                    f"{entry['dma_coalesced']:>8,} "
                    f"(-{entry['dma_reduction']:.0%})")
             if time_kernels:
-                msg += f" | interpret speedup {entry['speedup']:.2f}x"
+                msg += f" | interpret ms ratio {entry['speedup']:.2f} (not meaningful off-TPU)"
             print(msg)
-    gm = geomean([r.get("speedup", 0) for r in rows]) if time_kernels else 0
     mean_dma = float(np.mean([r["dma_reduction"] for r in rows]))
     if verbose:
-        print(f"  mean DMA-transaction reduction: {mean_dma:.0%} "
+        print(f"  mean DMA-issue reduction: {mean_dma:.0%} "
               f"(paper Fig. 15: 1.18–1.34x from 50% fewer transactions)")
     write_csv("fig15_coalescing.csv", rows)
-    return {"mean_dma_reduction": mean_dma, "geomean_speedup": gm, "rows": rows}
+    out = {"mean_dma_reduction": mean_dma, "rows": rows}
+    if time_kernels:
+        out["geomean_ms_ratio_interpret_only"] = geomean(
+            [r.get("speedup", 0) for r in rows])
+    return out
 
 
 if __name__ == "__main__":

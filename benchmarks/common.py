@@ -94,3 +94,42 @@ def geomean(xs: Iterable[float]) -> float:
     if not xs:
         return 0.0
     return float(np.exp(np.mean(np.log(xs))))
+
+
+def emit_bench_json(recs: Sequence[Dict], path: str, *, op: str,
+                    fused_impl: str, baseline_impl: str) -> Dict:
+    """Write a machine-readable BENCH_*.json and return its summary.
+
+    ``recs`` are per-(matrix, shape, impl) records carrying ``hbm_bytes``;
+    the summary aggregates the staged-baseline / fused traffic ratio that
+    CI floor-checks (see .github/workflows/ci.yml).
+    """
+    import json
+
+    fused = {(r["matrix"], tuple(r["shape"])): r["hbm_bytes"]
+             for r in recs if r["impl"] == fused_impl}
+    ratios = [r["hbm_bytes"] / max(fused[(r["matrix"], tuple(r["shape"]))], 1)
+              for r in recs if r["impl"] == baseline_impl]
+    summary = {
+        "hbm_reduction_geomean_staged_vs_fused": geomean(ratios),
+        "hbm_reduction_min_staged_vs_fused": min(ratios) if ratios else 0.0,
+        "num_records": len(recs),
+    }
+    with open(path, "w") as f:
+        json.dump({"op": op, "summary": summary, "records": list(recs)},
+                  f, indent=2)
+    return summary
+
+
+def attach_bench_json(result: Dict, recs: Sequence[Dict], path: str, *,
+                      op: str, fused_impl: str, baseline_impl: str,
+                      verbose: bool = True) -> Dict:
+    """Emit BENCH_*.json and fold its summary into a run() result dict."""
+    summary = emit_bench_json(recs, path, op=op, fused_impl=fused_impl,
+                              baseline_impl=baseline_impl)
+    summary["path"] = path
+    result["bench"] = summary
+    if verbose:
+        print(f"  wrote {path}: staged/fused HBM geomean "
+              f"{summary['hbm_reduction_geomean_staged_vs_fused']:.2f}x")
+    return result

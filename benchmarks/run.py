@@ -5,7 +5,10 @@
   PYTHONPATH=src python -m benchmarks.run --only fig1,table7
 
 Artifacts land in experiments/bench/*.csv; the summary block printed at
-the end is the cross-check against the paper's headline numbers.
+the end is the cross-check against the paper's headline numbers.  The
+fig11/fig13 benches additionally emit machine-readable BENCH_spmm.json /
+BENCH_sddmm.json (op, impl, shape, sparsity, median ms, modeled HBM bytes
+per record) so future PRs have a perf trajectory to regress against.
 """
 
 from __future__ import annotations
@@ -53,7 +56,8 @@ def main(argv=None) -> int:
             kwargs["scale"] = min(scale, 0.01)
         if key == "fig15":
             # interpret-mode Pallas executes the kernel body in Python —
-            # the non-coalesced ablation's grid is one step per vector
+            # the non-coalesced ablation serializes one DMA round trip
+            # per nonzero vector
             kwargs["scale"] = min(scale, 0.002)
         out = mod.run(**kwargs)
         out.pop("rows", None)

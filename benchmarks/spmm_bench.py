@@ -19,11 +19,81 @@ import numpy as np
 from repro.core import block_format, from_coo, spmm_blocked, spmm_coo_segment
 from repro.core.spmm import spmm_dense_ref
 
+from .common import attach_bench_json, emit_bench_json as common_emit
 from .common import geomean, suite, time_fn, write_csv
 
 
+def bench_records(scale: float = 0.002, n_values=(128,),
+                  include_tuned: bool = True, verbose: bool = True):
+    """Machine-readable per-impl records (op, impl, shape, sparsity,
+    median_ms, hbm_bytes) for the perf trajectory (BENCH_spmm.json).
+
+    Timed in interpret mode (kernel bodies run in Python), so ``scale`` is
+    kept small; the modeled HBM bytes are exact structural counts either
+    way.  ``pallas_staged`` is the pre-fusion staged-gather baseline the
+    fused kernel is regressed against.
+    """
+    from repro.kernels import ops
+
+    recs = []
+    for g in suite(scale):
+        shape = (g.num_nodes, g.num_nodes)
+        fmt = from_coo(g.rows, g.cols, g.vals, shape, vector_size=8)
+        blocked = block_format(fmt, k_blk=8)
+        sparsity = 1.0 - g.num_edges / float(shape[0] * shape[1])
+        for n in n_values:
+            b = jnp.asarray(np.random.default_rng(0).standard_normal(
+                (g.num_nodes, n)).astype(np.float32))
+            n_blk_eff = min(128, max(n, 1))
+            impls = [
+                ("pallas_fused", "fused", 8,
+                 lambda: ops.spmm(blocked, b, interpret=True)),
+                ("pallas_staged", "staged", 8,
+                 lambda: ops.spmm_staged(blocked, b, interpret=True)),
+                ("pallas_noncoalesced", "noncoalesced", 8,
+                 lambda: ops.spmm_noncoalesced(blocked, b, interpret=True)),
+            ]
+            for impl, model, k_blk, fn in impls:
+                recs.append({
+                    "op": "spmm", "impl": impl, "matrix": g.name,
+                    "shape": [shape[0], shape[1], n], "sparsity": sparsity,
+                    "vector_size": 8, "k_blk": k_blk, "n_blk": n_blk_eff,
+                    "median_ms": time_fn(fn, reps=3, warmup=1),
+                    "hbm_bytes": ops.spmm_hbm_bytes(
+                        blocked, n, n_blk=n_blk_eff, impl=model),
+                })
+            if include_tuned:
+                # the same tune → re-block plan users get from spmm_tuned
+                cfg, blocked_t = ops.spmm_tuned_plan(
+                    fmt, b, interpret=True, k_blks=(8, 16), n_blks=(64, 128))
+                recs.append({
+                    "op": "spmm", "impl": "pallas_tuned", "matrix": g.name,
+                    "shape": [shape[0], shape[1], n], "sparsity": sparsity,
+                    "vector_size": 8, "k_blk": cfg.k_blk, "n_blk": cfg.n_blk,
+                    "median_ms": time_fn(
+                        lambda: ops.spmm(blocked_t, b, n_blk=cfg.n_blk,
+                                         interpret=True),
+                        reps=3, warmup=1),
+                    "hbm_bytes": ops.spmm_hbm_bytes(
+                        blocked_t, n, n_blk=cfg.n_blk, impl="fused"),
+                })
+            if verbose:
+                by = {r["impl"]: r for r in recs
+                      if r["matrix"] == g.name and r["shape"][2] == n}
+                red = (by["pallas_staged"]["hbm_bytes"]
+                       / max(by["pallas_fused"]["hbm_bytes"], 1))
+                print(f"  {g.name:16s} N={n:3d} HBM staged/fused {red:.2f}x")
+    return recs
+
+
+def emit_bench_json(recs, path: str = "BENCH_spmm.json") -> dict:
+    """Write BENCH_spmm.json and return the aggregate summary."""
+    return common_emit(recs, path, op="spmm", fused_impl="pallas_fused",
+                       baseline_impl="pallas_staged")
+
+
 def run(scale: float = 0.02, n_values=(128, 256), include_pallas: bool = False,
-        verbose: bool = True):
+        verbose: bool = True, bench_json: str | None = "BENCH_spmm.json"):
     rows = []
     for g in suite(scale):
         shape = (g.num_nodes, g.num_nodes)
@@ -74,7 +144,14 @@ def run(scale: float = 0.02, n_values=(128, 256), include_pallas: bool = False,
     if verbose:
         print(f"  geomean speedup 8x1 vs 16x1: {gm:.2f}x | vs coo: {gm_coo:.2f}x")
     write_csv("fig11_spmm.csv", rows)
-    return {"geomean_8_vs_16": gm, "geomean_8_vs_coo": gm_coo, "rows": rows}
+    result = {"geomean_8_vs_16": gm, "geomean_8_vs_coo": gm_coo, "rows": rows}
+    if bench_json:
+        # interpret-mode kernels run their bodies in Python → small scale
+        attach_bench_json(
+            result, bench_records(scale=min(scale, 0.002), verbose=verbose),
+            bench_json, op="spmm", fused_impl="pallas_fused",
+            baseline_impl="pallas_staged", verbose=verbose)
+    return result
 
 
 if __name__ == "__main__":

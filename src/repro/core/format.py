@@ -94,14 +94,22 @@ class BlockedMEBCRS:
       cols      (NB * K_BLK,)     column ids (0 for padding — vals are 0)
       mask      (NB * K_BLK, V)   element mask (False for padding)
       block_win (NB,) int32       output window of each K-block
+      win_ptr   (W + 1,) int32    K-block range of each window: window ``w``
+                                  owns blocks ``[win_ptr[w], win_ptr[w+1])``
     Consecutive K-blocks of one window are adjacent, so a sequential kernel
     can accumulate into one resident output tile (revisiting pattern).
+    ``block_win`` is the scatter view (segment-sum paths); ``win_ptr`` is the
+    gather view driving the fused Pallas kernels' per-window inner loop.
+    For the degenerate all-empty matrix a single dummy zero block exists so
+    every array is non-empty, but no window owns it (``win_ptr[-1] == 0``),
+    so ``win_ptr[-1] <= num_blocks`` with equality in every non-empty case.
     """
 
     vals: jax.Array
     cols: jax.Array
     mask: jax.Array
     block_win: jax.Array
+    win_ptr: jax.Array
     shape: Tuple[int, int]
     vector_size: int
     k_blk: int
@@ -115,7 +123,8 @@ class BlockedMEBCRS:
         return -(-self.shape[0] // self.vector_size)
 
     def tree_flatten(self):
-        leaves = (self.vals, self.cols, self.mask, self.block_win)
+        leaves = (self.vals, self.cols, self.mask, self.block_win,
+                  self.win_ptr)
         return leaves, (self.shape, self.vector_size, self.k_blk)
 
     @classmethod
@@ -246,11 +255,18 @@ def block_format(fmt: MEBCRS, k_blk: int = 8) -> BlockedMEBCRS:
     if blk == 0:  # all-empty matrix: one dummy block on window 0
         block_win[0] = 0
 
+    # Per-window K-block ranges for the fused kernels' inner loop.  The
+    # all-empty dummy block is deliberately outside every range (its vals
+    # are zero anyway, but the fused kernels then skip it entirely).
+    win_ptr = np.zeros((w + 1,), dtype=np.int32)
+    win_ptr[1:] = np.cumsum(nblk_per_win)
+
     return BlockedMEBCRS(
         vals=jnp.asarray(vals),
         cols=jnp.asarray(cols),
         mask=jnp.asarray(mask),
         block_win=jnp.asarray(block_win),
+        win_ptr=jnp.asarray(win_ptr),
         shape=fmt.shape,
         vector_size=v,
         k_blk=k_blk,

@@ -61,12 +61,27 @@ def sddmm_coo(rows, cols, q, k):
 
 
 def sddmm(fmt, q: jax.Array, k: jax.Array, impl: str = "blocked",
-          k_blk: int = 8, interpret: bool = True):
+          k_blk: int = 8, interpret: bool | None = None):
     """SDDMM dispatch → blocked-layout values (NNZP, V).
+
+    ``impl`` ∈ {"blocked", "pallas", "pallas_tuned"}.  ``interpret=None``
+    auto-detects (compile on TPU, interpret elsewhere — resolved in
+    :mod:`repro.kernels.ops`).  ``pallas_tuned`` requires the canonical
+    :class:`MEBCRS` (the autotuner re-blocks per candidate ``k_blk``) and —
+    since the blocked layout depends on the tuned ``k_blk`` — returns the
+    :class:`BlockedMEBCRS` with the scores bound as values instead of a
+    bare value array.
 
     Compose with SpMM by replacing ``blocked.vals`` (see
     :func:`with_values`).
     """
+    if impl == "pallas_tuned":
+        from repro.kernels import ops
+
+        if isinstance(fmt, BlockedMEBCRS):
+            raise ValueError("impl='pallas_tuned' needs the canonical MEBCRS "
+                             "(the autotuner re-blocks it per k_blk candidate)")
+        return ops.sddmm_tuned(fmt, q, k, interpret=interpret)
     blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
     if impl == "blocked":
         return _sddmm_blocked_impl(blocked, q, k)

@@ -7,8 +7,14 @@ Three execution paths:
     coalesced access), per-K-block partial products, segment-sum over
     windows.  jit/pjit/shard_map friendly; this path backs the dry-run and
     the distributed models.
-  * ``pallas``: the TPU kernel (kernels/spmm_pallas.py), grouped window-GEMM
-    with scalar prefetch.  Validated in interpret mode on CPU.
+  * ``pallas``: the TPU kernel (kernels/spmm_pallas.py), gather-free grouped
+    window-GEMM — dense rows are DMA'd HBM→VMEM inside the kernel from the
+    original B operand (no staging buffer), double-buffered, with the
+    zero-init and output cast fused into the epilogue (DESIGN.md §3).
+    Validated in interpret mode on CPU; compiles to Mosaic on TPU
+    (``interpret=None`` auto-detects).
+  * ``pallas_tuned``: same kernel behind the (k_blk, n_blk) autotuner
+    (kernels/autotune.py) with a persistent on-disk config cache.
   * ``coo_segment``: element-wise scatter-add SpMM — the "CUDA-core class"
     baseline (Sputnik / RoDe / cuSPARSE row algorithms reduce to this data
     flow on TPU); also serves as an independent oracle.
@@ -65,8 +71,15 @@ def spmm_coo_segment(rows, cols, vals, b, num_rows: int):
 
 
 def spmm(fmt: MEBCRS, b: jax.Array, impl: str = "blocked", k_blk: int = 8,
-         interpret: bool = True) -> jax.Array:
-    """SpMM dispatch. ``impl`` ∈ {"blocked", "pallas"}."""
+         interpret: bool | None = None) -> jax.Array:
+    """SpMM dispatch. ``impl`` ∈ {"blocked", "pallas", "pallas_tuned"}.
+
+    ``interpret=None`` auto-detects: the Pallas paths compile to Mosaic on
+    a TPU backend and fall back to interpret mode elsewhere (resolved in
+    :mod:`repro.kernels.ops`); pass ``True``/``False`` to force a mode.
+    ``pallas_tuned`` sweeps/caches ``(k_blk, n_blk)`` via the autotuner and
+    requires the canonical :class:`MEBCRS` (it re-blocks per candidate).
+    """
     if impl == "blocked":
         return spmm_blocked(fmt, b, k_blk=k_blk)
     if impl == "pallas":
@@ -74,4 +87,11 @@ def spmm(fmt: MEBCRS, b: jax.Array, impl: str = "blocked", k_blk: int = 8,
 
         blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
         return ops.spmm(blocked, b, interpret=interpret)
+    if impl == "pallas_tuned":
+        from repro.kernels import ops
+
+        if isinstance(fmt, BlockedMEBCRS):
+            raise ValueError("impl='pallas_tuned' needs the canonical MEBCRS "
+                             "(the autotuner re-blocks it per k_blk candidate)")
+        return ops.spmm_tuned(fmt, b, interpret=interpret)
     raise ValueError(f"unknown impl {impl!r}")

@@ -1,5 +1,6 @@
-"""Pallas TPU kernels for FlashSparse SpMM / SDDMM (+ jnp oracles)."""
+"""Pallas TPU kernels for FlashSparse SpMM / SDDMM (+ jnp oracles,
+(k_blk, n_blk) autotuner)."""
 
-from . import ops, ref
+from . import autotune, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["autotune", "ops", "ref"]

@@ -1,0 +1,203 @@
+"""(k_blk, n_blk/f_blk) autotuner for the fused Pallas kernels.
+
+FlashSparse fixes the MMA granularity (8×1 vectors) but the TPU kernels
+still expose two free tiling parameters: the K-block depth ``k_blk`` (how
+many nonzero vectors one grid step contracts) and the output column tile
+``n_blk`` (``f_blk`` for SDDMM).  The best point depends on the matrix's
+sparsity structure and on N — Acc-SpMM / cuTeSpMM (PAPERS.md) make the
+same observation for their GPU tile shapes.
+
+This module sweeps a small candidate grid per *(matrix-stats, N) bucket*
+and memoizes the winner in a persistent on-disk JSON cache, so repeated
+runs (benchmarks, serving, training epochs) pay the sweep once.  Buckets
+are deliberately coarse — log2 of the window count, of the mean vectors
+per window, and of N — so structurally similar matrices share an entry.
+
+Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune_cache.json`` (CWD-independent, so library calls
+from arbitrary directories reuse the same tuned configs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.format import MEBCRS, block_format
+
+__all__ = [
+    "TuneConfig",
+    "AutotuneCache",
+    "matrix_stats_key",
+    "tune_spmm",
+    "tune_sddmm",
+    "default_cache",
+]
+
+DEFAULT_K_BLKS: Tuple[int, ...] = (8, 16, 32)
+DEFAULT_N_BLKS: Tuple[int, ...] = (64, 128, 256)
+
+_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_DEFAULT_CACHE_PATH = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro", "autotune_cache.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneConfig:
+    """Winner of one sweep: the tiling pair and its measured median ms."""
+
+    k_blk: int
+    n_blk: int
+    median_ms: float
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "TuneConfig":
+        return cls(k_blk=int(d["k_blk"]), n_blk=int(d["n_blk"]),
+                   median_ms=float(d["median_ms"]))
+
+
+def _log2_bucket(x: float) -> int:
+    return max(int(x), 1).bit_length()
+
+
+def matrix_stats_key(fmt: MEBCRS, n: int, op: str, *,
+                     interpret: bool) -> str:
+    """Coarse bucket key: structurally similar (matrix, N) pairs collide."""
+    w = fmt.num_windows
+    nnzv = fmt.nnzv
+    avg_vec = nnzv / max(w, 1)
+    return "|".join([
+        op,
+        f"v{fmt.vector_size}",
+        f"w{_log2_bucket(w)}",
+        f"vec{_log2_bucket(avg_vec)}",
+        f"n{_log2_bucket(n)}",
+        jax.default_backend(),
+        "interp" if interpret else "compiled",
+    ])
+
+
+class AutotuneCache:
+    """Persistent JSON cache ``{stats_key: TuneConfig}`` with atomic saves."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or os.environ.get(_CACHE_ENV, _DEFAULT_CACHE_PATH)
+        self._data: Optional[Dict[str, Dict]] = None
+
+    def _load(self) -> Dict[str, Dict]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    self._data = json.load(f)
+            except (OSError, ValueError):
+                self._data = {}
+        return self._data
+
+    def get(self, key: str) -> Optional[TuneConfig]:
+        entry = self._load().get(key)
+        return TuneConfig.from_json(entry) if entry else None
+
+    def put(self, key: str, cfg: TuneConfig) -> None:
+        data = self._load()
+        data[key] = cfg.to_json()
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+        os.replace(tmp, self.path)
+
+
+_DEFAULT_CACHE: Optional[AutotuneCache] = None
+
+
+def default_cache() -> AutotuneCache:
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None:
+        _DEFAULT_CACHE = AutotuneCache()
+    return _DEFAULT_CACHE
+
+
+def _median_ms(fn, reps: int, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(times))
+
+
+def _sweep(fmt: MEBCRS, run_cfg, minor: int, key: str, *,
+           k_blks: Sequence[int], n_blks: Sequence[int],
+           reps: int, cache: Optional[AutotuneCache]) -> TuneConfig:
+    cache = cache if cache is not None else default_cache()
+    # The candidate grid is part of the key: a sweep over (8, 16) must not
+    # satisfy a later request for (32,) — the winner would be a config the
+    # caller explicitly excluded.
+    key = (f"{key}|k{','.join(map(str, sorted(k_blks)))}"
+           f"|nb{','.join(map(str, sorted(n_blks)))}")
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+
+    best: Optional[TuneConfig] = None
+    for k_blk in k_blks:
+        blocked = block_format(fmt, k_blk)
+        seen = set()
+        for n_blk in n_blks:
+            eff = min(n_blk, max(minor, 1))
+            if eff in seen:
+                continue
+            seen.add(eff)
+            ms = _median_ms(lambda: run_cfg(blocked, eff), reps=reps)
+            if best is None or ms < best.median_ms:
+                best = TuneConfig(k_blk=k_blk, n_blk=eff, median_ms=ms)
+    assert best is not None
+    cache.put(key, best)
+    return best
+
+
+def tune_spmm(fmt: MEBCRS, b_dense: jax.Array, *,
+              k_blks: Sequence[int] = DEFAULT_K_BLKS,
+              n_blks: Sequence[int] = DEFAULT_N_BLKS,
+              interpret: bool = True, reps: int = 3,
+              cache: Optional[AutotuneCache] = None) -> TuneConfig:
+    """Pick (k_blk, n_blk) for :func:`spmm_pallas` on this matrix class."""
+    from .spmm_pallas import spmm_pallas
+
+    n = b_dense.shape[1]
+    key = matrix_stats_key(fmt, n, "spmm", interpret=interpret)
+    return _sweep(
+        fmt,
+        lambda blocked, n_blk: spmm_pallas(
+            blocked, b_dense, n_blk=n_blk, interpret=interpret),
+        n, key, k_blks=k_blks, n_blks=n_blks, reps=reps, cache=cache,
+    )
+
+
+def tune_sddmm(fmt: MEBCRS, q: jax.Array, k: jax.Array, *,
+               k_blks: Sequence[int] = DEFAULT_K_BLKS,
+               f_blks: Sequence[int] = DEFAULT_N_BLKS,
+               interpret: bool = True, reps: int = 3,
+               cache: Optional[AutotuneCache] = None) -> TuneConfig:
+    """Pick (k_blk, f_blk) for :func:`sddmm_pallas` on this matrix class."""
+    from .sddmm_pallas import sddmm_pallas
+
+    f = q.shape[1]
+    key = matrix_stats_key(fmt, f, "sddmm", interpret=interpret)
+    return _sweep(
+        fmt,
+        lambda blocked, f_blk: sddmm_pallas(
+            blocked, q, k, f_blk=f_blk, interpret=interpret),
+        f, key, k_blks=k_blks, n_blks=f_blks, reps=reps, cache=cache,
+    )

@@ -1,39 +1,134 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``interpret=True`` (the default off-TPU) executes the kernel bodies in
-Python on CPU for correctness validation; on a real TPU pass
-``interpret=False`` to compile to Mosaic.
+``interpret`` semantics (shared by every wrapper and by the ``core``
+dispatch layer, which threads ``interpret=None`` straight through):
+
+  * ``None`` (default) — auto-detect: compile to Mosaic when the default
+    JAX backend is a TPU, otherwise fall back to interpret mode, which
+    executes the kernel bodies in Python for correctness validation.
+  * ``True`` / ``False`` — force interpret / compiled mode explicitly.
+
+The ``*_tuned`` wrappers consult the :mod:`repro.kernels.autotune`
+subsystem to pick ``(k_blk, n_blk)`` per matrix-stats bucket (persistent
+on-disk cache), then run the fused gather-free kernels.
 """
 
 from __future__ import annotations
 
 import jax
 
-from .sddmm_pallas import sddmm_pallas
-from .spmm_pallas import spmm_pallas, spmm_pallas_noncoalesced
+from .sddmm_pallas import sddmm_hbm_bytes, sddmm_pallas
+from .spmm_pallas import (
+    spmm_hbm_bytes,
+    spmm_pallas,
+    spmm_pallas_noncoalesced,
+    spmm_pallas_staged,
+)
 
-__all__ = ["spmm", "sddmm", "spmm_noncoalesced"]
+__all__ = [
+    "spmm",
+    "sddmm",
+    "spmm_noncoalesced",
+    "spmm_staged",
+    "spmm_tuned",
+    "spmm_tuned_plan",
+    "sddmm_tuned",
+    "spmm_hbm_bytes",
+    "sddmm_hbm_bytes",
+]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _resolve_interpret(interpret: bool | None) -> bool:
+    return (not _on_tpu()) if interpret is None else interpret
+
+
 def spmm(blocked, b_dense, *, n_blk: int = 128, interpret: bool | None = None):
-    if interpret is None:
-        interpret = not _on_tpu()
-    return spmm_pallas(blocked, b_dense, n_blk=n_blk, interpret=interpret)
+    """Fused gather-free SpMM (dense rows DMA'd in-kernel)."""
+    return spmm_pallas(blocked, b_dense, n_blk=n_blk,
+                       interpret=_resolve_interpret(interpret))
 
 
 def spmm_noncoalesced(blocked, b_dense, *, n_blk: int = 128,
                       interpret: bool | None = None):
-    if interpret is None:
-        interpret = not _on_tpu()
+    """Serialized-DMA ablation of :func:`spmm` (paper Fig. 15)."""
     return spmm_pallas_noncoalesced(blocked, b_dense, n_blk=n_blk,
-                                    interpret=interpret)
+                                    interpret=_resolve_interpret(interpret))
+
+
+def spmm_staged(blocked, b_dense, *, n_blk: int = 128,
+                interpret: bool | None = None):
+    """Legacy staged-gather SpMM baseline (HBM staging buffer)."""
+    return spmm_pallas_staged(blocked, b_dense, n_blk=n_blk,
+                              interpret=_resolve_interpret(interpret))
 
 
 def sddmm(blocked, q, k, *, f_blk: int = 128, interpret: bool | None = None):
-    if interpret is None:
-        interpret = not _on_tpu()
-    return sddmm_pallas(blocked, q, k, f_blk=f_blk, interpret=interpret)
+    """Fused gather-free SDDMM (K rows DMA'd in-kernel)."""
+    return sddmm_pallas(blocked, q, k, f_blk=f_blk,
+                        interpret=_resolve_interpret(interpret))
+
+
+def spmm_tuned_plan(fmt, b_dense, *, interpret: bool | None = None,
+                    cache=None, k_blks=None, n_blks=None):
+    """Resolve the tuned execution plan: ``(cfg, blocked)``.
+
+    This is the single tune → re-block sequence behind :func:`spmm_tuned`;
+    benchmarks use it too, so they measure exactly the path users run.
+    """
+    from repro.core.format import block_format
+
+    from . import autotune
+
+    interpret = _resolve_interpret(interpret)
+    kwargs = {}
+    if k_blks is not None:
+        kwargs["k_blks"] = k_blks
+    if n_blks is not None:
+        kwargs["n_blks"] = n_blks
+    cfg = autotune.tune_spmm(fmt, b_dense, interpret=interpret, cache=cache,
+                             **kwargs)
+    return cfg, block_format(fmt, cfg.k_blk)
+
+
+def spmm_tuned(fmt, b_dense, *, interpret: bool | None = None, cache=None,
+               k_blks=None, n_blks=None):
+    """Autotuned SpMM: sweep/cache (k_blk, n_blk), then run the fused kernel.
+
+    ``fmt`` must be the canonical :class:`~repro.core.format.MEBCRS` (the
+    tuner re-blocks it per candidate ``k_blk``).
+    """
+    cfg, blocked = spmm_tuned_plan(fmt, b_dense, interpret=interpret,
+                                   cache=cache, k_blks=k_blks, n_blks=n_blks)
+    return spmm_pallas(blocked, b_dense, n_blk=cfg.n_blk,
+                       interpret=_resolve_interpret(interpret))
+
+
+def sddmm_tuned(fmt, q, k, *, interpret: bool | None = None, cache=None,
+                k_blks=None, f_blks=None):
+    """Autotuned SDDMM: sweep/cache (k_blk, f_blk), then run the fused kernel.
+
+    Because the blocked value layout depends on the tuned ``k_blk``, this
+    returns the full :class:`~repro.core.format.BlockedMEBCRS` with the
+    sampled scores bound as its values (pattern + scores), ready to feed
+    the subsequent SpMM directly.
+    """
+    from repro.core.format import block_format
+    from repro.core.sddmm import with_values
+
+    from . import autotune
+
+    interpret = _resolve_interpret(interpret)
+    kwargs = {}
+    if k_blks is not None:
+        kwargs["k_blks"] = k_blks
+    if f_blks is not None:
+        kwargs["f_blks"] = f_blks
+    cfg = autotune.tune_sddmm(fmt, q, k, interpret=interpret, cache=cache,
+                              **kwargs)
+    blocked = block_format(fmt, cfg.k_blk)
+    vals = sddmm_pallas(blocked, q, k, f_blk=cfg.n_blk, interpret=interpret)
+    return with_values(blocked, vals)

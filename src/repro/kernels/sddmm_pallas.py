@@ -6,10 +6,16 @@ subsequent SpMM with **zero** re-layout — the paper needs Algorithm 1's
 per-thread offset arithmetic to split the 8×16 TC block C into SpMM-shaped
 sub-blocks; on TPU the block layouts coincide by construction.
 
-Grid ``(NB, F / F_BLK)`` with the feature dimension innermost: the output
-block for sparse block ``b`` stays resident in VMEM while the QKᵀ
-contraction accumulates over feature tiles; the sparsity mask (the
-"sampled" part) is applied on the final feature tile.
+Gather-free (DESIGN.md §3): K stays in HBM (``memory_space=ANY``) and the
+kernel DMAs the K_BLK rows each sparse block samples — at the feature tile
+currently being contracted — into a double-buffered VMEM scratch, driven by
+the scalar-prefetched ``cols``.  This removes the ``(NB·K_BLK, F)`` staged
+gather the previous pipeline materialized in HBM.  The sparsity mask and
+the cast to the input dtype are fused into the final-feature-tile epilogue.
+
+Grid ``(NB, F / F_BLK)`` with the feature dimension innermost: the fp32
+accumulator for sparse block ``b`` stays resident in VMEM scratch while the
+QKᵀ contraction walks the feature tiles.
 """
 
 from __future__ import annotations
@@ -21,63 +27,101 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["sddmm_pallas"]
+__all__ = ["sddmm_pallas", "sddmm_hbm_bytes"]
 
 
-def _sddmm_kernel(block_win_ref, q_ref, kg_ref, mask_ref, o_ref, *, nf: int):
-    f = pl.program_id(1)
+def _fused_sddmm_kernel(block_win_ref, cols_ref, q_ref, k_hbm, mask_ref,
+                        o_ref, acc_ref, k_buf, sems, *,
+                        k_blk: int, f_blk: int, nf: int):
+    b = pl.program_id(0)
+    fi = pl.program_id(1)
+    base = b * k_blk
 
-    @pl.when(f == 0)
+    def row_copies(tile_fi, slot):
+        """K_BLK single-row DMA descriptors of K's feature tile ``tile_fi``
+        at the block's scalar-prefetched column ids."""
+        return [
+            pltpu.make_async_copy(
+                k_hbm.at[pl.ds(cols_ref[base + r], 1),
+                         pl.ds(tile_fi * f_blk, f_blk)],
+                k_buf.at[slot, pl.ds(r, 1)],
+                sems.at[slot],
+            )
+            for r in range(k_blk)
+        ]
+
+    @pl.when(fi == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        for cp in row_copies(0, 0):
+            cp.start()
 
-    # (K_BLK, V) += kg (K_BLK, F_BLK) @ qᵀ (F_BLK, V)
-    partial = jax.lax.dot_general(
-        kg_ref[...],
-        q_ref[...],
+    slot = jax.lax.rem(fi, 2)
+
+    @pl.when(fi + 1 < nf)
+    def _prefetch_next():
+        for cp in row_copies(fi + 1, 1 - slot):
+            cp.start()
+
+    for cp in row_copies(fi, slot):
+        cp.wait()
+
+    # (K_BLK, V) += krows (K_BLK, F_BLK) @ qᵀ (F_BLK, V)
+    acc_ref[...] += jax.lax.dot_general(
+        k_buf[slot].astype(jnp.float32),
+        q_ref[...].astype(jnp.float32),
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
-    o_ref[...] += partial
 
-    @pl.when(f == nf - 1)
-    def _mask():
-        o_ref[...] *= mask_ref[...].astype(jnp.float32)
+    @pl.when(fi == nf - 1)
+    def _epilogue():
+        # Fused epilogue: sample at the sparsity pattern and cast in-kernel.
+        o_ref[...] = (acc_ref[...] * mask_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("v", "k_blk", "f_blk", "interpret"))
-def _sddmm_call(block_win, qpad, kgath, mask, *, v, k_blk, f_blk, interpret):
+def _fused_sddmm_call(block_win, cols, qpad, k_dense, mask, *, v, k_blk,
+                      f_blk, interpret):
     nb = block_win.shape[0]
-    f = qpad.shape[1]
-    nf = f // f_blk
+    f_pad = qpad.shape[1]
+    nf = f_pad // f_blk
     grid = (nb, nf)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((v, f_blk), lambda b, fi, bw: (bw[b], fi)),
-            pl.BlockSpec((k_blk, f_blk), lambda b, fi, bw: (b, fi)),
-            pl.BlockSpec((k_blk, v), lambda b, fi, bw: (b, 0)),
+            pl.BlockSpec((v, f_blk), lambda b, fi, bw, c: (bw[b], fi)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # K stays in HBM
+            pl.BlockSpec((k_blk, v), lambda b, fi, bw, c: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((k_blk, v), lambda b, fi, bw: (b, 0)),
+        out_specs=pl.BlockSpec((k_blk, v), lambda b, fi, bw, c: (b, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((k_blk, v), jnp.float32),           # fp32 accumulator
+            pltpu.VMEM((2, k_blk, f_blk), k_dense.dtype),  # K-rows buffer
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
     )
-    out_shape = jax.ShapeDtypeStruct((nb * k_blk, v), jnp.float32)
-    kernel = functools.partial(_sddmm_kernel, nf=nf)
+    out_shape = jax.ShapeDtypeStruct((nb * k_blk, v), qpad.dtype)
+    kernel = functools.partial(
+        _fused_sddmm_kernel, k_blk=k_blk, f_blk=f_blk, nf=nf)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(block_win, qpad, kgath, mask)
+    )(block_win, cols, qpad, k_dense, mask)
 
 
 def sddmm_pallas(blocked, q: jax.Array, k: jax.Array, *, f_blk: int = 128,
                  interpret: bool = True) -> jax.Array:
-    """SDDMM over a :class:`BlockedMEBCRS` pattern.
+    """Gather-free SDDMM over a :class:`BlockedMEBCRS` pattern.
 
     Returns blocked-layout values ``(NB * K_BLK, V)`` in ``q`` dtype,
     directly consumable by :func:`repro.core.sddmm.with_values` + SpMM.
+    K's sampled rows are DMA'd in-kernel; no staged gather of K remains.
     """
     v = blocked.vector_size
     w = blocked.num_windows
@@ -86,12 +130,41 @@ def sddmm_pallas(blocked, q: jax.Array, k: jax.Array, *, f_blk: int = 128,
     f_pad = -(-f // f_blk) * f_blk
 
     qpad = jnp.zeros((w * v, f_pad), q.dtype).at[: q.shape[0], :f].set(q)
-    kgath = jnp.take(k, blocked.cols, axis=0)
-    if f_pad != f:
-        kgath = jnp.pad(kgath, ((0, 0), (0, f_pad - f)))
+    k_padded = k if f_pad == f else jnp.pad(k, ((0, 0), (0, f_pad - f)))
 
-    out = _sddmm_call(
-        blocked.block_win, qpad, kgath, blocked.mask,
+    return _fused_sddmm_call(
+        blocked.block_win, blocked.cols, qpad, k_padded, blocked.mask,
         v=v, k_blk=blocked.k_blk, f_blk=f_blk, interpret=interpret,
     )
-    return out.astype(q.dtype)
+
+
+def sddmm_hbm_bytes(blocked, f: int, *, f_blk: int = 128,
+                    impl: str = "fused", value_bytes: int = 4) -> int:
+    """Modeled HBM bytes moved by one SDDMM under ``impl``.
+
+    ``fused``: each sampled K row is DMA'd exactly once (the feature tiles
+    partition the row); Q window tiles are streamed per block; mask read
+    once; output written once in its final dtype.
+
+    ``staged``: the pre-fusion pipeline additionally read K and wrote /
+    re-read the ``(NB·K_BLK, F)`` gather buffer, and wrote an fp32
+    intermediate recast in a post-pass.
+    """
+    v = blocked.vector_size
+    nnzp = int(blocked.cols.shape[0])
+    nb = nnzp // blocked.k_blk
+    f_blk = min(f_blk, max(f, 1))
+    f_pad = -(-f // f_blk) * f_blk
+
+    k_pass = nnzp * f_pad * value_bytes          # one sweep over sampled rows
+    q_bytes = nb * v * f_pad * value_bytes       # Q window tile per block
+    mask_bytes = nnzp * v                        # bool mask
+    meta_bytes = 4 * nb + 4 * nnzp               # block_win + cols
+    out_bytes = nnzp * v * value_bytes           # output written once
+
+    if impl == "fused":
+        return k_pass + q_bytes + mask_bytes + meta_bytes + out_bytes
+    if impl == "staged":
+        postpass = 2 * nnzp * v * 4
+        return 3 * k_pass + q_bytes + mask_bytes + meta_bytes + out_bytes + postpass
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,28 +1,34 @@
-"""Pallas TPU SpMM kernel — grouped window-GEMM over blocked ME-BCRS.
+"""Pallas TPU SpMM kernels — grouped window-GEMM over blocked ME-BCRS.
 
 This is the TPU realization of FlashSparse's swap-and-transpose SpMM
-(paper §3.3), adapted per DESIGN.md §2:
+(paper §3.3), adapted per DESIGN.md §2–§3:
 
   * The sparse operand arrives **vector-major** (``vals (K_BLK, V)`` = Aᵀ),
     so the window size V = 8 sits on the minor dimension of the MXU
     contraction — the granularity the paper obtains by swapping MMA
     operands falls out of the storage layout here.
-  * Dense rows are staged through one contiguous gather ``bgath = B[cols]``
-    so every BlockSpec DMA is a full-lane contiguous HBM→VMEM copy — the
-    TPU analogue of the paper's coalesced thread mapping (§3.3, Fig. 7).
-    The "non-coalesced" ablation mode instead DMAs each dense row
-    separately through a (1, N) grid, reproducing the strided-access
-    penalty structurally.
-  * ME-BCRS's padding-free residue handling (§3.5) appears as the
-    ``block_win`` scalar-prefetch array: padding vectors inside the last
-    K-block of a window carry zero values, so their MXU contribution
-    vanishes — the same arithmetic elimination as the paper's modulo test,
-    resolved without branches.
+  * **Gather-free** (DESIGN.md §3): the dense operand B stays in HBM
+    (``memory_space=ANY``) and the kernel DMAs exactly the K_BLK dense rows
+    each K-block needs into a double-buffered VMEM scratch
+    (``pltpu.make_async_copy`` driven by the scalar-prefetched ``cols``).
+    Every dense row slice is a full-lane contiguous HBM→VMEM copy — the TPU
+    analogue of the paper's coalesced thread mapping (§3.3, Fig. 7) — and B
+    is read **once** per output column tile, with no ``(NB·K_BLK, N)``
+    staging buffer in HBM.  The legacy staged-gather path survives as
+    :func:`spmm_pallas_staged` (baseline for the Fig. 12-style traffic
+    model, :func:`spmm_hbm_bytes`).
+  * The grid runs over **output windows** with an inner loop over that
+    window's K-blocks (the scalar-prefetched ``win_ptr`` ranges), so every
+    output tile is initialized exactly once, empty windows are written zero
+    in-kernel, and the fp32 accumulator is cast to the output dtype in the
+    epilogue — no ``_zero_unvisited`` / ``astype`` post-passes.
+  * ME-BCRS's padding-free residue handling (§3.5) is unchanged: padding
+    vectors inside the last K-block of a window carry zero values, so their
+    MXU contribution vanishes — the paper's arithmetic elimination of the
+    modulo residue, resolved without branches.
 
-Grid: ``(N / N_BLK, NB)`` with the block index innermost, so all K-blocks
-of one output window are consecutive and the output tile stays resident in
-VMEM across the accumulation (revisiting pattern).  The accumulator block
-is (V=8, N_BLK=128) fp32 — exactly one VREG tile.
+Grid: ``(N / N_BLK, W)`` with the window index innermost.  The accumulator
+block is (V=8, N_BLK=128) fp32 — exactly one VREG tile.
 """
 
 from __future__ import annotations
@@ -34,13 +40,181 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["spmm_pallas", "spmm_pallas_noncoalesced"]
+__all__ = [
+    "spmm_pallas",
+    "spmm_pallas_noncoalesced",
+    "spmm_pallas_staged",
+    "spmm_hbm_bytes",
+]
 
 
-def _spmm_kernel(block_win_ref, vals_ref, bg_ref, o_ref, *, nb: int):
+# ---------------------------------------------------------------------------
+# Fused gather-free kernel (default path)
+# ---------------------------------------------------------------------------
+
+
+def _fused_spmm_kernel(win_ptr_ref, cols_ref, vals_hbm, b_hbm, o_ref,
+                       acc_ref, vals_buf, b_buf, sems, *,
+                       k_blk: int, n_blk: int, double_buffer: bool):
     j = pl.program_id(0)
+    w = pl.program_id(1)
+    lo = win_ptr_ref[w]
+    hi = win_ptr_ref[w + 1]
+
+    def block_copies(blk, slot):
+        """DMA descriptors for K-block ``blk`` into scratch slot ``slot``:
+        one (K_BLK, V) vals tile plus K_BLK single dense-row slices of B at
+        the scalar-prefetched column ids (contiguous full-lane copies)."""
+        base = blk * k_blk
+        vals_cp = pltpu.make_async_copy(
+            vals_hbm.at[pl.ds(base, k_blk), :],
+            vals_buf.at[slot],
+            sems.at[slot, 0],
+        )
+        row_cps = [
+            pltpu.make_async_copy(
+                b_hbm.at[pl.ds(cols_ref[base + r], 1),
+                         pl.ds(j * n_blk, n_blk)],
+                b_buf.at[slot, pl.ds(r, 1)],
+                sems.at[slot, 1],
+            )
+            for r in range(k_blk)
+        ]
+        return [vals_cp] + row_cps
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def accumulate(slot):
+        # contraction over the K_BLK vector index: (V, N_BLK) += valsᵀ @ brows
+        acc_ref[...] += jax.lax.dot_general(
+            vals_buf[slot].astype(jnp.float32),
+            b_buf[slot].astype(jnp.float32),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    if double_buffer:
+        @pl.when(lo < hi)
+        def _warmup():
+            for cp in block_copies(lo, 0):
+                cp.start()
+
+        def body(blk, carry):
+            slot = jax.lax.rem(blk - lo, 2)
+
+            @pl.when(blk + 1 < hi)
+            def _prefetch_next():
+                for cp in block_copies(blk + 1, 1 - slot):
+                    cp.start()
+
+            for cp in block_copies(blk, slot):
+                cp.wait()
+            accumulate(slot)
+            return carry
+    else:
+        # Serialized variant (the "non-coalesced" ablation): each dense row
+        # is fetched and waited on individually, with no overlap between
+        # DMA and compute — the structural analogue of the strided-access
+        # penalty the paper's direct thread mapping suffers (Fig. 15).
+        def body(blk, carry):
+            for cp in block_copies(blk, 0):
+                cp.start()
+                cp.wait()
+            accumulate(0)
+            return carry
+
+    jax.lax.fori_loop(lo, hi, body, 0)
+    # Fused epilogue: exactly-once init above means empty windows (lo == hi)
+    # fall through to a zero store; cast to the output dtype in-kernel.
+    o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_windows", "v", "k_blk", "n_blk", "interpret",
+                     "double_buffer"),
+)
+def _fused_spmm_call(win_ptr, cols, vals, b_dense, *, num_windows, v, k_blk,
+                     n_blk, interpret, double_buffer):
+    n_pad = b_dense.shape[1]
+    grid = (n_pad // n_blk, num_windows)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),  # vals stay in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # B stays in HBM
+        ],
+        out_specs=pl.BlockSpec((v, n_blk), lambda j, w, wp, c: (w, j)),
+        scratch_shapes=[
+            pltpu.VMEM((v, n_blk), jnp.float32),          # fp32 accumulator
+            pltpu.VMEM((2, k_blk, v), vals.dtype),        # vals double-buffer
+            pltpu.VMEM((2, k_blk, n_blk), b_dense.dtype),  # B-rows buffer
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
+    )
+    kernel = functools.partial(
+        _fused_spmm_kernel, k_blk=k_blk, n_blk=n_blk,
+        double_buffer=double_buffer,
+    )
+    out_shape = jax.ShapeDtypeStruct((num_windows * v, n_pad), b_dense.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(win_ptr, cols, vals, b_dense)
+
+
+def _pad_cols(b_dense: jax.Array, n_blk: int):
+    n = b_dense.shape[1]
+    n_blk = min(n_blk, max(n, 1))
+    n_pad = -(-n // n_blk) * n_blk
+    if n_pad != n:
+        b_dense = jnp.pad(b_dense, ((0, 0), (0, n_pad - n)))
+    return b_dense, n_blk
+
+
+def _spmm_fused(blocked, b_dense: jax.Array, n_blk: int, interpret: bool,
+                double_buffer: bool) -> jax.Array:
+    m, _ = blocked.shape
+    n = b_dense.shape[1]
+    b_padded, n_blk = _pad_cols(b_dense, n_blk)
+    out = _fused_spmm_call(
+        blocked.win_ptr, blocked.cols, blocked.vals, b_padded,
+        num_windows=blocked.num_windows, v=blocked.vector_size,
+        k_blk=blocked.k_blk, n_blk=n_blk, interpret=interpret,
+        double_buffer=double_buffer,
+    )
+    return out[:m, :n]
+
+
+def spmm_pallas(blocked, b_dense: jax.Array, *, n_blk: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """Gather-free SpMM over a :class:`BlockedMEBCRS`. Returns (M, N) in
+    ``b`` dtype.  Dense rows are DMA'd HBM→VMEM inside the kernel
+    (double-buffered); no staging buffer is materialized."""
+    return _spmm_fused(blocked, b_dense, n_blk, interpret, double_buffer=True)
+
+
+def spmm_pallas_noncoalesced(blocked, b_dense: jax.Array, *, n_blk: int = 128,
+                             interpret: bool = True) -> jax.Array:
+    """Ablation variant (paper Fig. 15): serialized per-row DMA with no
+    double buffering.  Bitwise-identical results to :func:`spmm_pallas`
+    (same accumulation order); only the copy scheduling differs."""
+    return _spmm_fused(blocked, b_dense, n_blk, interpret, double_buffer=False)
+
+
+# ---------------------------------------------------------------------------
+# Staged-gather baseline (the pre-fusion pipeline, kept for the traffic
+# model and ablation benchmarks): bgath = B[cols] materialized in HBM, then
+# re-read through BlockSpecs; unvisited windows zeroed in a post-pass.
+# ---------------------------------------------------------------------------
+
+
+def _staged_spmm_kernel(block_win_ref, vals_ref, bg_ref, o_ref):
     b = pl.program_id(1)
-    del j
     w = block_win_ref[b]
     prev_w = block_win_ref[jnp.maximum(b - 1, 0)]
     is_first = jnp.logical_or(b == 0, prev_w != w)
@@ -49,7 +223,6 @@ def _spmm_kernel(block_win_ref, vals_ref, bg_ref, o_ref, *, nb: int):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    # contraction over the K_BLK vector index: (V, N_BLK) += valsᵀ @ bgath
     partial = jax.lax.dot_general(
         vals_ref[...],
         bg_ref[...],
@@ -62,8 +235,8 @@ def _spmm_kernel(block_win_ref, vals_ref, bg_ref, o_ref, *, nb: int):
 @functools.partial(
     jax.jit, static_argnames=("num_windows", "v", "k_blk", "n_blk", "interpret")
 )
-def _spmm_call(block_win, vals, bgath, *, num_windows, v, k_blk, n_blk,
-               interpret):
+def _staged_spmm_call(block_win, vals, bgath, *, num_windows, v, k_blk, n_blk,
+                      interpret):
     nb = block_win.shape[0]
     n = bgath.shape[1]
     grid = (n // n_blk, nb)
@@ -78,9 +251,8 @@ def _spmm_call(block_win, vals, bgath, *, num_windows, v, k_blk, n_blk,
         out_specs=pl.BlockSpec((v, n_blk), lambda j, b, bw: (bw[b], j)),
     )
     out_shape = jax.ShapeDtypeStruct((num_windows * v, n), jnp.float32)
-    kernel = functools.partial(_spmm_kernel, nb=nb)
     return pl.pallas_call(
-        kernel,
+        _staged_spmm_kernel,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
@@ -88,28 +260,26 @@ def _spmm_call(block_win, vals, bgath, *, num_windows, v, k_blk, n_blk,
 
 
 def _zero_unvisited(out, block_win, num_windows, v):
-    """Windows with no nonzero vectors are never visited by the grid — their
-    output tiles are uninitialized.  Zero them (ME-BCRS stays padding-free,
-    so this is resolved outside the kernel; NaN-safe ``where``)."""
+    """Windows with no nonzero vectors are never visited by the staged grid —
+    their output tiles are uninitialized.  Zero them (NaN-safe ``where``)."""
     visited = jnp.zeros((num_windows,), jnp.bool_).at[block_win].set(True)
     mask = jnp.repeat(visited, v)[:, None]
     return jnp.where(mask, out, 0.0)
 
 
-def spmm_pallas(blocked, b_dense: jax.Array, *, n_blk: int = 128,
-                interpret: bool = True) -> jax.Array:
-    """SpMM over a :class:`BlockedMEBCRS`. Returns (M, N) in ``b`` dtype."""
+def spmm_pallas_staged(blocked, b_dense: jax.Array, *, n_blk: int = 128,
+                       interpret: bool = True) -> jax.Array:
+    """Legacy staged-gather SpMM: materializes ``bgath = B[cols]`` in HBM
+    (an ``avg_vectors_per_row ×`` blow-up of B) before the kernel.  Kept as
+    the baseline the fused path is measured against."""
     m, _ = blocked.shape
     v = blocked.vector_size
     num_windows = blocked.num_windows
     n = b_dense.shape[1]
-    n_blk = min(n_blk, max(n, 1))
-    n_pad = -(-n // n_blk) * n_blk
-    if n_pad != n:
-        b_dense = jnp.pad(b_dense, ((0, 0), (0, n_pad - n)))
+    b_dense, n_blk = _pad_cols(b_dense, n_blk)
 
-    bgath = jnp.take(b_dense, blocked.cols, axis=0)  # coalesced staging
-    out = _spmm_call(
+    bgath = jnp.take(b_dense, blocked.cols, axis=0)  # staged gather in HBM
+    out = _staged_spmm_call(
         blocked.block_win, blocked.vals, bgath, num_windows=num_windows,
         v=v, k_blk=blocked.k_blk, n_blk=n_blk, interpret=interpret,
     )
@@ -118,48 +288,41 @@ def spmm_pallas(blocked, b_dense: jax.Array, *, n_blk: int = 128,
 
 
 # ---------------------------------------------------------------------------
-# Ablation: non-coalesced access (paper Fig. 15 counterpart).
-# Each dense row is DMA'd individually via a (1, N) block — structurally the
-# strided per-row access the paper's direct thread mapping suffers from.
+# Modeled HBM traffic (bytes moved per SpMM) — the Fig. 12-style cost model
+# extended to the execution paths above.  Exact structural counts; dense
+# and output elements assume ``value_bytes`` (fp32 = 4).
 # ---------------------------------------------------------------------------
 
 
-def _gather_rowwise_kernel(cols_ref, b_ref, out_ref):
-    out_ref[...] = b_ref[...]
+def spmm_hbm_bytes(blocked, n: int, *, n_blk: int = 128,
+                   impl: str = "fused", value_bytes: int = 4) -> int:
+    """Modeled HBM bytes moved by one SpMM under ``impl``.
 
+    ``fused`` / ``noncoalesced``: each needed dense row is DMA'd from B
+    exactly once per output column tile; vals tiles are re-read per column
+    tile; the output is written once in its final dtype.
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _gather_rowwise(cols, b_dense, interpret):
-    nnzp = cols.shape[0]
-    n = b_dense.shape[1]
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(nnzp,),
-        in_specs=[pl.BlockSpec((1, n), lambda t, cols: (cols[t], 0))],
-        out_specs=pl.BlockSpec((1, n), lambda t, cols: (t, 0)),
-    )
-    return pl.pallas_call(
-        _gather_rowwise_kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nnzp, n), b_dense.dtype),
-        interpret=interpret,
-    )(cols, b_dense)
-
-
-def spmm_pallas_noncoalesced(blocked, b_dense: jax.Array, *, n_blk: int = 128,
-                             interpret: bool = True) -> jax.Array:
-    """Ablation variant: per-row (strided) dense gather instead of staged."""
-    m, _ = blocked.shape
+    ``staged``: additionally reads B and writes the ``(NB·K_BLK, N)``
+    gather buffer, then re-reads it inside the kernel — three full passes
+    over the gathered dense rows instead of one.
+    """
     v = blocked.vector_size
-    n = b_dense.shape[1]
+    nnzp = int(blocked.cols.shape[0])
+    w = blocked.num_windows
     n_blk = min(n_blk, max(n, 1))
     n_pad = -(-n // n_blk) * n_blk
-    if n_pad != n:
-        b_dense = jnp.pad(b_dense, ((0, 0), (0, n_pad - n)))
-    bgath = _gather_rowwise(blocked.cols, b_dense, interpret)
-    out = _spmm_call(
-        blocked.block_win, blocked.vals, bgath, num_windows=blocked.num_windows,
-        v=v, k_blk=blocked.k_blk, n_blk=n_blk, interpret=interpret,
-    )
-    out = _zero_unvisited(out, blocked.block_win, blocked.num_windows, v)
-    return out[:m, :n].astype(b_dense.dtype)
+    nj = n_pad // n_blk
+
+    dense_pass = nnzp * n_pad * value_bytes      # one sweep over needed rows
+    vals_bytes = nj * nnzp * v * value_bytes     # vals re-read per column tile
+    meta_bytes = 4 * (w + 1) + 4 * nnzp          # win_ptr/block_win + cols
+    out_bytes = w * v * n_pad * value_bytes      # output written once
+
+    if impl in ("fused", "noncoalesced"):
+        return dense_pass + vals_bytes + meta_bytes + out_bytes
+    if impl == "staged":
+        # gather read + gather write + kernel re-read of bgath, plus the
+        # fp32 intermediate re-read/rewritten by the zero/cast post-pass.
+        postpass = 2 * w * v * n_pad * 4
+        return 3 * dense_pass + vals_bytes + meta_bytes + out_bytes + postpass
+    raise ValueError(f"unknown impl {impl!r}")

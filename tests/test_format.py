@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skips
 
 from repro.core import (
     block_format,
