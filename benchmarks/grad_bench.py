@@ -1,0 +1,97 @@
+"""Backward-duality benchmark (DESIGN.md §9): fwd vs fwd+bwd per impl.
+
+Times the differentiable sparse ops — forward, and ``jax.grad`` w.r.t.
+(vals, dense operand) whose backward is the dispatched transpose-SpMM +
+masked SDDMM — for every differentiable registry impl, and emits the
+machine-readable ``BENCH_grad.json`` perf record (median ms per op/impl/
+matrix, fwd and fwd+bwd) so future PRs can regress the training-path
+trajectory, like BENCH_spmm/BENCH_sddmm do for inference.
+
+  PYTHONPATH=src python -m benchmarks.run --op grad_spmm [--scale 0.002]
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import from_coo
+from repro.core.autodiff import ad_plan, sddmm_ad, spmm_ad
+
+from .common import geomean, suite, time_fn, write_csv
+
+IMPLS = ("blocked", "pallas", "pallas_tuned")
+N_FEAT = 32
+
+
+def _bench_matrix(g, op: str, impls) -> list:
+    rng = np.random.default_rng(0)
+    fmt = from_coo(g.rows, g.cols, g.vals, (g.num_nodes, g.num_nodes),
+                   vector_size=8)
+    m = g.num_nodes
+    b = jnp.asarray(rng.standard_normal((m, N_FEAT)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((m, N_FEAT)).astype(np.float32))
+    recs = []
+    for impl in impls:
+        plan = ad_plan(fmt, impl=impl, n_example=N_FEAT, interpret=True)
+        if op == "spmm":
+            fwd = jax.jit(lambda v, bb: spmm_ad(plan, v, bb, impl=impl,
+                                                interpret=True))
+            grad = jax.jit(jax.grad(
+                lambda v, bb: spmm_ad(plan, v, bb, impl=impl,
+                                      interpret=True).sum(),
+                argnums=(0, 1)))
+            args = (plan.vals, b)
+        else:  # sddmm
+            fwd = jax.jit(lambda qq, kk: sddmm_ad(plan, qq, kk, impl=impl,
+                                                  interpret=True))
+            grad = jax.jit(jax.grad(
+                lambda qq, kk: sddmm_ad(plan, qq, kk, impl=impl,
+                                        interpret=True).sum(),
+                argnums=(0, 1)))
+            args = (q, b)
+        fwd_ms = time_fn(fwd, *args, reps=3, warmup=1)
+        fwdbwd_ms = time_fn(grad, *args, reps=3, warmup=1)
+        recs.append({
+            "op": f"grad_{op}",
+            "impl": impl,
+            "matrix": g.name,
+            "shape": [m, m, N_FEAT],
+            "nnz": int(g.num_edges),
+            "fwd_ms": round(fwd_ms, 3),
+            "fwdbwd_ms": round(fwdbwd_ms, 3),
+            "bwd_overhead": round(fwdbwd_ms / max(fwd_ms, 1e-9), 2),
+        })
+        print(f"  {g.name:16s} {impl:14s} fwd {fwd_ms:8.2f} ms | "
+              f"fwd+bwd {fwdbwd_ms:8.2f} ms")
+    return recs
+
+
+def run(scale: float = 0.02, op: str = "spmm", impls=IMPLS):
+    # interpret-mode Pallas executes kernel bodies in Python: keep the
+    # matrix subset small (same reasoning as the fig15 ablation).
+    graphs = suite(scale=min(scale, 0.005))[:3]
+    recs = []
+    for g in graphs:
+        recs.extend(_bench_matrix(g, op, impls))
+
+    per_impl = {
+        impl: geomean([r["bwd_overhead"] for r in recs if r["impl"] == impl])
+        for impl in impls
+    }
+    summary = {
+        "bwd_overhead_geomean": {k: round(v, 2) for k, v in per_impl.items()},
+        "num_records": len(recs),
+    }
+    path = "BENCH_grad.json"
+    with open(path, "w") as f:
+        json.dump({"op": f"grad_{op}", "summary": summary,
+                   "records": recs}, f, indent=2)
+    print(f"  wrote {path}: fwd+bwd/fwd geomean "
+          + ", ".join(f"{k}={v:.2f}x" for k, v in per_impl.items()))
+    write_csv(f"grad_{op}.csv", recs)
+    return {"bench": {**summary, "path": path}, "rows": recs}

@@ -3,6 +3,7 @@
   PYTHONPATH=src python -m benchmarks.run            # full suite
   PYTHONPATH=src python -m benchmarks.run --quick    # reduced scale
   PYTHONPATH=src python -m benchmarks.run --only fig1,table7
+  PYTHONPATH=src python -m benchmarks.run --op grad_spmm  # fwd+bwd timing
 
 Artifacts land in experiments/bench/*.csv; the summary block printed at
 the end is the cross-check against the paper's headline numbers.  The
@@ -30,17 +31,40 @@ BENCHES = {
     "fig16": ("gnn_e2e", "Fig. 16/Table 8 — end-to-end GNN"),
 }
 
+# --op modes: gradient (fwd+bwd) trajectories through the autodiff layer,
+# emitting BENCH_grad.json (DESIGN.md §9).  Not part of the default suite —
+# select explicitly, e.g. ``--op grad_spmm``.
+GRAD_OPS = {
+    "grad_spmm": "spmm",
+    "grad_sddmm": "sddmm",
+}
+
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--only", default=None,
                    help="comma-separated subset of: " + ",".join(BENCHES))
+    p.add_argument("--op", default=None, choices=sorted(GRAD_OPS),
+                   help="run a gradient benchmark mode instead of the "
+                        "figure suite (writes BENCH_grad.json)")
     p.add_argument("--quick", action="store_true")
     p.add_argument("--scale", type=float, default=None)
     args = p.parse_args(argv)
 
-    selected = list(BENCHES) if not args.only else args.only.split(",")
     scale = args.scale or (0.005 if args.quick else 0.02)
+
+    if args.op is not None:
+        from benchmarks import grad_bench
+
+        print(f"\n=== §9 backward duality — {args.op} fwd+bwd per impl ===")
+        t0 = time.time()
+        out = grad_bench.run(scale=scale, op=GRAD_OPS[args.op])
+        out.pop("rows", None)
+        print(f"\n=== summary ({time.time() - t0:.0f}s) ===")
+        print(json.dumps(out, indent=2, default=str))
+        return 0
+
+    selected = list(BENCHES) if not args.only else args.only.split(",")
 
     summary = {}
     t_start = time.time()

@@ -7,19 +7,25 @@ global, BigBird-ish) is stored as ME-BCRS at V=8 granularity; attention
 scores are computed only at the nonzero pattern (SDDMM), row-normalized
 (sparse softmax), and aggregated (SpMM).
 
-Validates against dense masked attention, and reports the compute saved
-vs dense full attention.
+The layer lives in ``repro.models.layers.sparse_attention`` and runs
+per-head batched on an autodiff plan, so ``--impl pallas``/``pallas_tuned``
+executes the fused kernels and ``jax.grad`` flows through the
+transpose-SpMM/SDDMM backward duality (DESIGN.md §9) — validated here
+against dense masked attention, values *and* gradients.
 
-  PYTHONPATH=src python examples/sparse_attention_lm.py
+  PYTHONPATH=src python examples/sparse_attention_lm.py [--impl pallas]
 """
+
+import argparse
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import block_format, from_coo, sddmm_blocked, spmm_blocked, with_values
-from repro.core.softmax import sparse_softmax
+from repro.core import from_coo
+from repro.core.autodiff import ad_plan
+from repro.models.layers import sparse_attention
 
 
 def block_sparse_causal_pattern(seq: int, window: int = 64, stride: int = 128):
@@ -34,42 +40,58 @@ def block_sparse_causal_pattern(seq: int, window: int = 64, stride: int = 128):
     return np.asarray(rows), np.asarray(cols)
 
 
-def sparse_attention(blocked, q, k, v):
-    """One head of FlashSparse attention: SDDMM → softmax → SpMM."""
-    scores = sddmm_blocked(blocked, q, k) / np.sqrt(q.shape[-1])
-    probs = sparse_softmax(blocked, scores)
-    return spmm_blocked(with_values(blocked, probs.astype(v.dtype)), v)
-
-
 def main():
-    seq, d = 512, 64
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--impl", default="blocked",
+                    help="registry impl: blocked | pallas | pallas_tuned")
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--heads", type=int, default=2)
+    args = ap.parse_args()
+
+    seq, d, heads = args.seq, 64, args.heads
     rows, cols = block_sparse_causal_pattern(seq)
     vals = np.ones_like(rows, np.float32)
     fmt = from_coo(rows, cols, vals, (seq, seq), vector_size=8)
-    blocked = block_format(fmt, k_blk=8)
+    plan = ad_plan(fmt, impl=args.impl, n_example=d)
     density = len(rows) / seq ** 2
     print(f"pattern: {len(rows):,} nonzeros of {seq * seq:,} "
           f"({density:.1%} dense) — compute saved vs full: {1 - density:.1%}")
 
     rng = np.random.default_rng(0)
-    q = jnp.asarray(rng.standard_normal((seq, d)).astype(np.float32))
-    k = jnp.asarray(rng.standard_normal((seq, d)).astype(np.float32))
-    v = jnp.asarray(rng.standard_normal((seq, d)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((heads, seq, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((heads, seq, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((heads, seq, d)).astype(np.float32))
 
-    out_sparse = sparse_attention(blocked, q, k, v)
+    out_sparse = sparse_attention(plan, q, k, v, impl=args.impl)
 
-    # dense oracle: same mask through standard attention
+    # dense oracle: same mask through standard attention, per head
     mask = np.zeros((seq, seq), bool)
     mask[rows, cols] = True
-    scores = (q @ k.T) / np.sqrt(d)
-    scores = jnp.where(jnp.asarray(mask), scores, -1e30)
-    out_dense = jax.nn.softmax(scores, axis=-1) @ v
+
+    def dense_head(qh, kh, vh):
+        scores = (qh @ kh.T) / np.sqrt(d)
+        scores = jnp.where(jnp.asarray(mask), scores, -1e30)
+        return jax.nn.softmax(scores, axis=-1) @ vh
+
+    out_dense = jnp.stack([dense_head(q[h], k[h], v[h])
+                           for h in range(heads)])
 
     err = float(jnp.max(jnp.abs(out_sparse - out_dense)))
     print(f"max |sparse - dense masked| = {err:.2e}")
     np.testing.assert_allclose(np.asarray(out_sparse), np.asarray(out_dense),
                                rtol=2e-4, atol=2e-4)
     print("block-sparse attention == dense masked attention  ✓")
+
+    # gradient check: the layer trains (backward = dispatched sparse ops)
+    gq = jax.grad(lambda qq: sparse_attention(plan, qq, k, v,
+                                              impl=args.impl).sum())(q)
+    gq_dense = jax.grad(lambda qq: jnp.stack(
+        [dense_head(qq[h], k[h], v[h]) for h in range(heads)]).sum())(q)
+    gerr = float(jnp.max(jnp.abs(gq - gq_dense)))
+    print(f"max |∂sparse/∂Q - ∂dense/∂Q| = {gerr:.2e}")
+    np.testing.assert_allclose(np.asarray(gq), np.asarray(gq_dense),
+                               rtol=2e-3, atol=2e-3)
+    print("sparse-attention gradients == dense masked gradients  ✓")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the gate every PR must keep green.
 #
-#   scripts/tier1.sh            # full suite
+#   scripts/tier1.sh            # full suite + gradient-path smoke
 #   scripts/tier1.sh tests/test_kernels.py   # pass-through pytest args
 #
 # Installs dev deps (hypothesis) when a network is available; offline, the
 # property tests degrade to skips via tests/_hypothesis_compat.py.
+# TIER1_SMOKE=0 skips the gnn_train gradient smoke (pytest-only runs).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,4 +17,12 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
     || echo "warn: dev deps unavailable (offline?); property tests will skip"
 fi
 
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+
+# Gradient-path smoke (full runs only): two training steps through the
+# autotuned Pallas impl must produce a finite, decreasing loss — the
+# backward runs the transpose-SpMM/SDDMM duality (DESIGN.md §9).
+if [[ $# -eq 0 && "${TIER1_SMOKE:-1}" == "1" ]]; then
+  python examples/gnn_train.py --steps 2 --impl pallas_tuned \
+    --model gcn --scale 0.002
+fi

@@ -1,5 +1,9 @@
-"""FlashSparse core: ME-BCRS format, SpMM/SDDMM operators, redundancy metrics."""
+"""FlashSparse core: ME-BCRS format, SpMM/SDDMM operators (with the
+unified dispatch registry and custom_vjp autodiff layer), redundancy
+metrics."""
 
+from . import dispatch
+from .autodiff import ADPlan, ad_plan, sddmm_ad, spmm_ad
 from .format import (
     MEBCRS,
     BlockedMEBCRS,
@@ -8,6 +12,7 @@ from .format import (
     from_dense,
     memory_footprint_me_bcrs,
     memory_footprint_sr_bcrs,
+    to_coo,
     to_dense,
 )
 from .metrics import (
@@ -23,10 +28,16 @@ from .spmm import spmm, spmm_blocked, spmm_coo_segment, spmm_dense_ref
 __all__ = [
     "MEBCRS",
     "BlockedMEBCRS",
+    "ADPlan",
+    "ad_plan",
+    "spmm_ad",
+    "sddmm_ad",
+    "dispatch",
     "block_format",
     "from_coo",
     "from_dense",
     "to_dense",
+    "to_coo",
     "memory_footprint_me_bcrs",
     "memory_footprint_sr_bcrs",
     "spmm",

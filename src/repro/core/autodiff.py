@@ -1,0 +1,362 @@
+"""Differentiable sparse ops: custom_vjp SpMM/SDDMM duality (DESIGN.md §9).
+
+The backward pass of each sparse operator is *made of the sparse operators
+we already optimized* — the classic duality:
+
+  SpMM   C = A⟨vals⟩ @ B        dB    = Aᵀ @ G                (transpose-SpMM)
+                                 dVals = mask ⊙ SDDMM(G, B)
+  SDDMM  S = mask ⊙ (Q Kᵀ)      dQ    = A⟨g⟩ @ K             (SpMM)
+                                 dK    = Aᵀ⟨g⟩ @ Q            (transpose-SpMM)
+
+so ``jax.grad`` through a model that aggregates with the fused Pallas
+kernels executes *the same* gather-free kernels backward — on Aᵀ for the
+transpose-SpMMs — instead of falling back to a dense or scatter-add path.
+
+Aᵀ cannot be re-blocked inside a traced function (the blocked layout's
+shapes are data-dependent), so the transposed format is a host-side
+precompute: :func:`ad_plan` builds an :class:`ADPlan` carrying
+
+  * ``fwd``  — A as a :class:`BlockedMEBCRS` (the forward layout),
+  * ``bwd``  — Aᵀ blocked (the transpose-SpMM layout; ``MEBCRS.transpose``
+    is memoized on the canonical format instance),
+  * ``perm`` — a gather map re-laying ``fwd``-layout values into
+    ``bwd``-layout, so value rebinding (the live ``vals`` residual for dB,
+    the upstream cotangent for dK) is one ``jnp.take``,
+
+plus the tile parameters each direction runs with.  The plan is a pytree:
+pass it through ``jit``/``grad``/``shard_map`` like the format itself.
+``impl="pallas_tuned"`` resolves the autotuner **at plan-build time**
+(fwd, transpose and SDDMM directions tuned independently, the SDDMM
+``k_blk`` pinned to the forward layout), so the traced computation never
+re-enters the host-side tuner.
+
+Both wrappers accept a leading batch dim on the dense operands and/or the
+bound values (per-head sparse attention): registry impls flagged
+``batched`` are ``jax.vmap``-ed, the Pallas paths get an unrolled
+per-slice loop (one grid per head).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dispatch as _dispatch
+from .format import MEBCRS, BlockedMEBCRS, block_format
+from .sddmm import with_values
+
+__all__ = ["ADPlan", "ad_plan", "spmm_ad", "sddmm_ad"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ADPlan:
+    """Execution plan for differentiable SpMM/SDDMM on one sparse pattern."""
+
+    fwd: BlockedMEBCRS    # A, forward layout
+    bwd: BlockedMEBCRS    # Aᵀ, transpose-SpMM layout (vals = re-laid A vals)
+    perm: jax.Array       # (NNZP_T, V) flat indices into fwd-layout vals
+    impl: str             # impl the tile parameters below were chosen for
+    n_blk: int            # forward SpMM column tile
+    n_blk_t: int          # transpose-SpMM (dB / dK) column tile
+    f_blk: int            # SDDMM feature tile (dVals / forward SDDMM)
+
+    @property
+    def vals(self) -> jax.Array:
+        return self.fwd.vals
+
+    @property
+    def mask(self) -> jax.Array:
+        return self.fwd.mask
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.fwd.shape
+
+    def transpose_vals(self, vals: jax.Array) -> jax.Array:
+        """Re-lay ``fwd``-layout values (NNZP, V) into ``bwd`` layout.
+
+        Pure gather: sources are exclusively mask-true ``fwd`` entries and
+        padding targets are zeroed, so junk in masked-off input positions
+        never leaks into the transpose-SpMM.
+        """
+        flat = jnp.take(vals.reshape(-1), self.perm.reshape(-1), axis=0)
+        return flat.reshape(self.bwd.vals.shape) * self.bwd.mask
+
+    def tree_flatten(self):
+        return ((self.fwd, self.bwd, self.perm),
+                (self.impl, self.n_blk, self.n_blk_t, self.f_blk))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        fwd, bwd, perm = leaves
+        impl, n_blk, n_blk_t, f_blk = aux
+        return cls(fwd=fwd, bwd=bwd, perm=perm, impl=impl, n_blk=n_blk,
+                   n_blk_t=n_blk_t, f_blk=f_blk)
+
+
+def _blocked_perm(blocked_a: BlockedMEBCRS,
+                  blocked_t: BlockedMEBCRS) -> np.ndarray:
+    """Gather map: ``perm[t', r']`` = flat index into ``blocked_a`` vals of
+    the matrix element stored at ``blocked_t`` entry (t', r'); 0 where the
+    target entry is padding/masked-off (zeroed by the mask multiply)."""
+    v = blocked_a.vector_size
+    _, k = blocked_a.shape
+
+    mask_a = np.asarray(blocked_a.mask)
+    ta, ra = np.nonzero(mask_a)
+    rows_a = np.asarray(blocked_a.block_win)[ta // blocked_a.k_blk] * v + ra
+    key_a = rows_a.astype(np.int64) * k + np.asarray(blocked_a.cols)[ta]
+    order = np.argsort(key_a)
+    key_sorted = key_a[order]
+    flat_sorted = (ta * v + ra)[order]
+
+    mask_t = np.asarray(blocked_t.mask)
+    tt, rt = np.nonzero(mask_t)
+    rows_t = np.asarray(blocked_t.block_win)[tt // blocked_t.k_blk] * v + rt
+    # entry (rows_t, cols_t) of Aᵀ is element (cols_t, rows_t) of A
+    key_t = np.asarray(blocked_t.cols)[tt].astype(np.int64) * k + rows_t
+    pos = np.searchsorted(key_sorted, key_t)
+    if not (pos.size == 0 or np.array_equal(key_sorted[pos], key_t)):
+        raise AssertionError("transpose layouts disagree on the sparsity "
+                             "pattern (corrupt format?)")
+    perm = np.zeros(mask_t.shape, np.int32)
+    perm[tt, rt] = flat_sorted[pos]
+    return perm
+
+
+def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
+            n_blk: int = 128, f_blk: int = 128, n_example: int = 64,
+            interpret: Optional[bool] = None, cache=None) -> ADPlan:
+    """Build (and memoize on ``fmt``) the differentiable-op plan.
+
+    Host-side precompute, like ``block_format`` — call outside ``jit``.
+    For ``impl="pallas_tuned"`` the autotuner picks ``(k_blk, n_blk)`` per
+    direction now (timing dummies of ``n_example`` feature columns in the
+    format's dtype), so traced forward/backward calls run the fused kernel
+    directly with the plan's tiles and never hit the tuner.
+    """
+    entry = _dispatch.require("spmm", impl, differentiable=True)
+    del entry
+    if isinstance(fmt, BlockedMEBCRS):
+        raise ValueError("ad_plan needs the canonical MEBCRS (it blocks "
+                         "both A and its transpose itself)")
+
+    # Only the tuned path consults interpret/cache (the tiles it picks
+    # differ per execution mode and per cache file) — resolve them into
+    # the memo key there; the fixed-tile impls share one plan.
+    interp = cache_tag = None
+    if impl == "pallas_tuned":
+        from repro.kernels import ops
+
+        interp = ops._resolve_interpret(interpret)
+        cache_tag = getattr(cache, "path", None) if cache is not None else None
+    key = (impl, k_blk, n_blk, f_blk, int(n_example), interp, cache_tag)
+    memo = getattr(fmt, "_ad_plans", None)
+    if memo is None:
+        memo = {}
+        object.__setattr__(fmt, "_ad_plans", memo)
+    if key in memo:
+        return memo[key]
+
+    fmt_t = fmt.transpose()
+    k_blk_f = k_blk_t = k_blk
+    n_blk_t = n_blk
+    if impl == "pallas_tuned":
+        from repro.kernels import autotune
+
+        m, k = fmt.shape
+        dt = fmt.values.dtype
+        b_ex = jnp.zeros((k, n_example), dt)
+        g_ex = jnp.zeros((m, n_example), dt)
+        cfg_f = autotune.tune_spmm(fmt, b_ex, interpret=interp, cache=cache)
+        cfg_t = autotune.tune_spmm(fmt_t, g_ex, interpret=interp, cache=cache)
+        # dVals must land in the forward value layout → pin the SDDMM k_blk
+        cfg_s = autotune.tune_sddmm(fmt, g_ex, b_ex, k_blks=(cfg_f.k_blk,),
+                                    interpret=interp, cache=cache)
+        k_blk_f, n_blk = cfg_f.k_blk, cfg_f.n_blk
+        k_blk_t, n_blk_t = cfg_t.k_blk, cfg_t.n_blk
+        f_blk = cfg_s.n_blk
+
+    blocked_f = block_format(fmt, k_blk_f)
+    blocked_t = block_format(fmt_t, k_blk_t)
+    plan = ADPlan(fwd=blocked_f, bwd=blocked_t,
+                  perm=jnp.asarray(_blocked_perm(blocked_f, blocked_t)),
+                  impl=impl, n_blk=n_blk, n_blk_t=n_blk_t, f_blk=f_blk)
+    memo[key] = plan
+    return plan
+
+
+def _exec_impl(impl: str) -> str:
+    """The impl the traced computation actually runs.  ``pallas_tuned``
+    fixed its tiles at plan-build time → execute the plain fused kernel."""
+    return "pallas" if impl == "pallas_tuned" else impl
+
+
+def _map_slices(entry, fn, batched_args, shared_args):
+    """Apply ``fn(*slices, *shared)`` over a leading batch dim.
+
+    ``batched_args`` is a list of (array, is_batched).  vmap when the
+    registry flags the impl as vmap-safe; otherwise unroll one grid per
+    slice (Pallas paths: heads are few, and each slice reuses the same
+    scalar-prefetch metadata).
+    """
+    h = next(a.shape[0] for a, ib in batched_args if ib)
+    if entry.batched:
+        in_axes = tuple(0 if ib else None for _, ib in batched_args)
+        return jax.vmap(lambda *xs: fn(*xs, *shared_args), in_axes=in_axes)(
+            *(a for a, _ in batched_args))
+    outs = [fn(*(a[i] if ib else a for a, ib in batched_args), *shared_args)
+            for i in range(h)]
+    return jnp.stack(outs)
+
+
+# ---------------------------------------------------------------------------
+# SpMM:  C = A⟨vals⟩ @ B
+# ---------------------------------------------------------------------------
+
+
+def _run_spmm(impl, interpret, plan: ADPlan, vals, b, *, transposed: bool):
+    blocked = plan.bwd if transposed else plan.fwd
+    n_blk = plan.n_blk_t if transposed else plan.n_blk
+    return _dispatch.dispatch("spmm", _exec_impl(impl),
+                              with_values(blocked, vals), b,
+                              k_blk=blocked.k_blk, n_blk=n_blk,
+                              interpret=interpret)
+
+
+def _run_sddmm(impl, interpret, plan: ADPlan, q, k):
+    return _dispatch.dispatch("sddmm", _exec_impl(impl), plan.fwd, q, k,
+                              k_blk=plan.fwd.k_blk, f_blk=plan.f_blk,
+                              interpret=interpret)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _spmm_ad(impl, interpret, plan: ADPlan, vals, b):
+    entry = _dispatch.get("spmm", _exec_impl(impl))
+    vals_m = vals * plan.fwd.mask  # masked entries are structural zeros
+    vb, bb = vals.ndim == 3, b.ndim == 3
+    if not (vb or bb):
+        return _run_spmm(impl, interpret, plan, vals_m, b, transposed=False)
+    run = lambda v_, b_: _run_spmm(impl, interpret, plan, v_, b_,
+                                   transposed=False)
+    return _map_slices(entry, run, [(vals_m, vb), (b, bb)], ())
+
+
+def _spmm_ad_fwd(impl, interpret, plan, vals, b):
+    return _spmm_ad(impl, interpret, plan, vals, b), (plan, vals, b)
+
+
+def _spmm_ad_bwd(impl, interpret, res, g):
+    plan, vals, b = res
+    entry = _dispatch.get("spmm", _exec_impl(impl))
+    vb, bb = vals.ndim == 3, b.ndim == 3
+
+    def d_b(v_, g_):      # dB = Aᵀ G — transpose-SpMM through the registry
+        return _run_spmm(impl, interpret, plan,
+                         plan.transpose_vals(v_ * plan.fwd.mask), g_,
+                         transposed=True)
+
+    def d_vals(g_, b_):   # dVals = mask ⊙ SDDMM(G, B) (impls mask in-epilogue)
+        return _run_sddmm(impl, interpret, plan, g_, b_)
+
+    if not (vb or bb):
+        db = d_b(vals, g)
+        dvals = d_vals(g, b)
+    else:
+        h = g.shape[0]
+        db_sl = _map_slices(entry, d_b, [(vals, vb), (g, True)], ())
+        db = db_sl if bb else jnp.sum(db_sl, axis=0)
+        dv_sl = _map_slices(entry, d_vals, [(g, True), (b, bb)], ())
+        dvals = dv_sl if vb else jnp.sum(dv_sl, axis=0)
+        del h
+    return None, dvals.astype(vals.dtype), db.astype(b.dtype)
+
+
+_spmm_ad.defvjp(_spmm_ad_fwd, _spmm_ad_bwd)
+
+
+def spmm_ad(plan: ADPlan, vals: jax.Array, b: jax.Array, *,
+            impl: Optional[str] = None,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """Differentiable SpMM: ``C = A⟨vals⟩ @ B`` on ``plan``'s pattern.
+
+    ``vals``: (NNZP, V) forward-layout values (or (H, NNZP, V) batched);
+    ``b``: (K, N) (or (H, K, N)).  Gradients flow to both: dVals via the
+    masked SDDMM, dB via the transpose-SpMM, each dispatched through the
+    registry (so the Pallas impls run the fused kernels backward too).
+    Masked-off/padding ``vals`` entries are treated as structural zeros —
+    the forward multiplies by the pattern mask, matching the dense-oracle
+    semantics of ``to_dense``.
+    """
+    impl = impl or plan.impl
+    _dispatch.require("spmm", impl, differentiable=True)
+    return _spmm_ad(impl, interpret, plan, vals, b)
+
+
+# ---------------------------------------------------------------------------
+# SDDMM:  S = mask ⊙ (Q Kᵀ) sampled at the pattern
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _sddmm_ad(impl, interpret, plan: ADPlan, q, k):
+    entry = _dispatch.get("sddmm", _exec_impl(impl))
+    qb, kb = q.ndim == 3, k.ndim == 3
+    if not (qb or kb):
+        return _run_sddmm(impl, interpret, plan, q, k)
+    run = lambda q_, k_: _run_sddmm(impl, interpret, plan, q_, k_)
+    return _map_slices(entry, run, [(q, qb), (k, kb)], ())
+
+
+def _sddmm_ad_fwd(impl, interpret, plan, q, k):
+    return _sddmm_ad(impl, interpret, plan, q, k), (plan, q, k)
+
+
+def _sddmm_ad_bwd(impl, interpret, res, g):
+    plan, q, k = res
+    entry = _dispatch.get("spmm", _exec_impl(impl))
+    qb, kb = q.ndim == 3, k.ndim == 3
+    mask = plan.fwd.mask
+
+    def d_q(g_, k_):      # dQ = A⟨g⟩ @ K — SpMM with the cotangent bound
+        return _run_spmm(impl, interpret, plan, g_ * mask, k_,
+                         transposed=False)[: q.shape[-2]]
+
+    def d_k(g_, q_):      # dK = Aᵀ⟨g⟩ @ Q — transpose-SpMM
+        return _run_spmm(impl, interpret, plan,
+                         plan.transpose_vals(g_ * mask), q_,
+                         transposed=True)[: k.shape[-2]]
+
+    if not (qb or kb):
+        dq, dk = d_q(g, k), d_k(g, q)
+    else:
+        dq_sl = _map_slices(entry, d_q, [(g, True), (k, kb)], ())
+        dq = dq_sl if qb else jnp.sum(dq_sl, axis=0)
+        dk_sl = _map_slices(entry, d_k, [(g, True), (q, qb)], ())
+        dk = dk_sl if kb else jnp.sum(dk_sl, axis=0)
+    return None, dq.astype(q.dtype), dk.astype(k.dtype)
+
+
+_sddmm_ad.defvjp(_sddmm_ad_fwd, _sddmm_ad_bwd)
+
+
+def sddmm_ad(plan: ADPlan, q: jax.Array, k: jax.Array, *,
+             impl: Optional[str] = None,
+             interpret: Optional[bool] = None) -> jax.Array:
+    """Differentiable SDDMM → forward-layout values (NNZP, V).
+
+    ``q``: (M, F) / (H, M, F); ``k``: (Mc, F) / (H, Mc, F).  Unlike
+    ``core.sddmm(impl="pallas_tuned")`` this always returns a bare value
+    array in the **plan's** forward layout (the tuner already ran at plan
+    build), so SDDMM → sparse softmax → SpMM compose without re-blocking.
+    Backward is two dispatched SpMMs: dQ on A, dK on the cached Aᵀ.
+    """
+    impl = impl or plan.impl
+    _dispatch.require("sddmm", impl, differentiable=True)
+    return _sddmm_ad(impl, interpret, plan, q, k)

@@ -1,0 +1,187 @@
+"""Unified (op, impl) dispatch registry for the sparse operators.
+
+Before this module, four separate ``impl=`` string ladders resolved the
+execution path — ``core/spmm.py``, ``core/sddmm.py``, ``kernels/ops.py``
+and ``models/gnn.py`` each kept their own if/elif chain, and they drifted
+(the GNN aggregation, for one, silently ignored ``impl="pallas_tuned"``).
+Now every implementation of an op registers here exactly once, with
+capability flags, and every layer — core dispatch, autodiff backward
+passes, models, train steps, benchmarks — resolves ``(op, impl)`` through
+the same table.
+
+Capability flags:
+
+  differentiable   the impl has a gradient path: either natively (XLA
+                   blocked einsum) or via :mod:`repro.core.autodiff`'s
+                   custom_vjp wrappers (Pallas paths)
+  batched          safe under ``jax.vmap`` over a leading dense-operand
+                   dim (the autodiff wrappers vmap these; non-batched
+                   impls get an unrolled per-slice loop instead)
+  tpu_only         compiled execution requires a TPU backend (no
+                   interpret-mode fallback)
+  needs_canonical  requires the canonical :class:`MEBCRS` (re-blocks it,
+                   e.g. the autotuned paths sweep ``k_blk``)
+  returns_format   returns a :class:`BlockedMEBCRS` with values bound
+                   instead of a bare value array (tuned SDDMM: the value
+                   layout depends on the tuned ``k_blk``)
+
+Providers self-register at import; :func:`get` lazily imports them so the
+table is complete no matter which layer touches the registry first.
+
+A **call log** records every dispatch: ``record_calls()`` yields a list
+that accumulates ``(op, impl)`` pairs for the duration of the context.
+Tests use it to prove, e.g., that the backward pass of the Pallas SpMM
+really executed the fused transpose-SpMM/SDDMM kernels rather than a
+dense fallback.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import importlib
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+__all__ = [
+    "OpImpl",
+    "register",
+    "get",
+    "impls",
+    "require",
+    "dispatch",
+    "record_calls",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class OpImpl:
+    """One registered implementation of a sparse op."""
+
+    op: str
+    name: str
+    fn: Callable
+    differentiable: bool = False
+    batched: bool = False
+    tpu_only: bool = False
+    needs_canonical: bool = False
+    returns_format: bool = False
+
+
+_REGISTRY: Dict[Tuple[str, str], OpImpl] = {}
+
+# Modules that register implementations at import time.  ``get`` imports
+# them lazily so the registry is fully populated regardless of entry point
+# (kernels are optional at core-import time, mirroring the old local
+# imports in core/spmm.py).
+_PROVIDERS = ("repro.core.spmm", "repro.core.sddmm", "repro.kernels.ops")
+_provider_errors: Dict[str, str] = {}
+_loaded = False
+_lock = threading.Lock()
+
+
+def register(op: str, name: str, fn: Callable, **flags) -> OpImpl:
+    """Register ``fn`` as implementation ``name`` of ``op``."""
+    entry = OpImpl(op=op, name=name, fn=fn, **flags)
+    _REGISTRY[(op, name)] = entry
+    return entry
+
+
+def _ensure_loaded() -> None:
+    global _loaded
+    if _loaded:
+        return
+    with _lock:
+        if _loaded:
+            return
+        for mod in _PROVIDERS:
+            # Best-effort: the kernels package stays optional (an
+            # environment without jax.experimental.pallas must still run
+            # the XLA impls).  A failed provider surfaces in the miss
+            # message of any impl it would have registered.
+            try:
+                importlib.import_module(mod)
+            except Exception as e:  # noqa: BLE001 — reported on lookup miss
+                _provider_errors[mod] = f"{type(e).__name__}: {e}"
+        _loaded = True
+
+
+def get(op: str, impl: str) -> OpImpl:
+    """Resolve ``(op, impl)`` → :class:`OpImpl`, loading providers lazily."""
+    _ensure_loaded()
+    entry = _REGISTRY.get((op, impl))
+    if entry is None:
+        msg = (f"unknown impl {impl!r} for op {op!r}; "
+               f"available: {', '.join(impls(op)) or '(none)'}")
+        if _provider_errors:
+            msg += "".join(f"\n  (provider {m} failed to import: {err})"
+                           for m, err in _provider_errors.items())
+        raise ValueError(msg)
+    return entry
+
+
+def impls(op: str) -> Tuple[str, ...]:
+    """Registered implementation names for ``op`` (sorted)."""
+    _ensure_loaded()
+    return tuple(sorted(n for (o, n) in _REGISTRY if o == op))
+
+
+def require(op: str, impl: str, *, differentiable: bool = False,
+            batched: bool = False) -> OpImpl:
+    """Resolve and enforce capability flags, with a targeted error."""
+    entry = get(op, impl)
+    if differentiable and not entry.differentiable:
+        ok = [n for n in impls(op) if _REGISTRY[(op, n)].differentiable]
+        raise ValueError(
+            f"impl {impl!r} of op {op!r} is not differentiable; "
+            f"differentiable impls: {', '.join(ok)}")
+    if batched and not entry.batched:
+        # Not fatal capability-wise — callers fall back to a per-slice
+        # loop — but ``require(batched=True)`` asks for the native path.
+        ok = [n for n in impls(op) if _REGISTRY[(op, n)].batched]
+        raise ValueError(
+            f"impl {impl!r} of op {op!r} has no native batched path; "
+            f"batched impls: {', '.join(ok)}")
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Call log
+# ---------------------------------------------------------------------------
+
+_local = threading.local()
+
+
+def _recorders() -> List[List[Tuple[str, str]]]:
+    recs = getattr(_local, "recorders", None)
+    if recs is None:
+        recs = _local.recorders = []
+    return recs
+
+
+@contextlib.contextmanager
+def record_calls():
+    """Context manager yielding a list that accumulates ``(op, impl)``
+    pairs for every :func:`dispatch` made while the context is active.
+
+    Dispatches happen at *trace* time, so a jitted function logs on its
+    first (tracing) call; wrap the tracing call in the context.
+    """
+    log: List[Tuple[str, str]] = []
+    _recorders().append(log)
+    try:
+        yield log
+    finally:
+        _recorders().remove(log)
+
+
+def _log(op: str, impl: str) -> None:
+    for rec in _recorders():
+        rec.append((op, impl))
+
+
+def dispatch(op: str, impl: str, *args, **kwargs):
+    """Resolve ``(op, impl)`` and call it, recording in the call log."""
+    entry = get(op, impl)
+    _log(op, impl)
+    return entry.fn(*args, **kwargs)

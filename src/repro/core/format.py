@@ -44,6 +44,7 @@ __all__ = [
     "from_dense",
     "from_coo",
     "to_dense",
+    "to_coo",
     "block_format",
     "memory_footprint_me_bcrs",
     "memory_footprint_sr_bcrs",
@@ -82,6 +83,27 @@ class MEBCRS:
     def tree_unflatten(cls, aux, leaves):
         shape, v = aux
         return cls(*leaves, shape=shape, vector_size=v)
+
+    def transpose(self) -> "MEBCRS":
+        """ME-BCRS of Aᵀ (host-side precompute, memoized on the instance).
+
+        The backward duality (DESIGN.md §9) turns SpMM/SDDMM gradients
+        into sparse ops *on Aᵀ* — dB = AᵀG is a transpose-SpMM — so the
+        transposed format is a one-time format-translation cost, exactly
+        like the forward CSR→ME-BCRS conversion, paid per adjacency and
+        reused every training step.  Requires concrete (non-tracer)
+        arrays: call it (or :func:`repro.core.autodiff.ad_plan`) outside
+        ``jit``, like ``block_format``.
+        """
+        cached = getattr(self, "_transpose_cache", None)
+        if cached is not None:
+            return cached
+        rows, cols, vals = to_coo(self)
+        m, k = self.shape
+        out = from_coo(cols, rows, vals, (k, m), vector_size=self.vector_size,
+                       dtype=self.values.dtype)
+        object.__setattr__(self, "_transpose_cache", out)
+        return out
 
 
 @jax.tree_util.register_pytree_node_class
@@ -210,6 +232,33 @@ def to_dense(fmt: MEBCRS) -> jax.Array:
     for t in range(vals.shape[0]):
         out[win_of_vec[t] * v : (win_of_vec[t] + 1) * v, ci[t]] += vals[t]
     return jnp.asarray(out[:m])
+
+
+def to_coo(fmt) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """True-nonzero COO triplets ``(rows, cols, vals)`` of a format.
+
+    Accepts the canonical :class:`MEBCRS` or a :class:`BlockedMEBCRS`
+    (padding entries carry ``mask=False`` and are dropped).  Host-side
+    numpy — a format-translation step, not jit-traceable.
+    """
+    v = fmt.vector_size
+    if isinstance(fmt, BlockedMEBCRS):
+        mask = np.asarray(fmt.mask)
+        t_idx, r_idx = np.nonzero(mask)
+        win = np.asarray(fmt.block_win)[t_idx // fmt.k_blk]
+        rows = win.astype(np.int64) * v + r_idx
+        cols = np.asarray(fmt.cols)[t_idx].astype(np.int64)
+        vals = np.asarray(fmt.vals)[t_idx, r_idx]
+        return rows, cols, vals
+    rp = np.asarray(fmt.row_pointers)
+    win_of_vec = np.repeat(np.arange(fmt.num_windows, dtype=np.int64),
+                           np.diff(rp))
+    mask = np.asarray(fmt.mask)
+    t_idx, r_idx = np.nonzero(mask)
+    rows = win_of_vec[t_idx] * v + r_idx
+    cols = np.asarray(fmt.column_indices)[t_idx].astype(np.int64)
+    vals = np.asarray(fmt.values)[t_idx, r_idx]
+    return rows, cols, vals
 
 
 def block_format(fmt: MEBCRS, k_blk: int = 8) -> BlockedMEBCRS:

@@ -18,7 +18,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .format import MEBCRS, BlockedMEBCRS, block_format
+from . import dispatch as _dispatch
+from .format import MEBCRS, BlockedMEBCRS, block_format, to_coo
 
 __all__ = ["sddmm", "sddmm_blocked", "sddmm_dense_ref", "sddmm_coo"]
 
@@ -61,35 +62,54 @@ def sddmm_coo(rows, cols, q, k):
 
 
 def sddmm(fmt, q: jax.Array, k: jax.Array, impl: str = "blocked",
-          k_blk: int = 8, interpret: bool | None = None):
-    """SDDMM dispatch → blocked-layout values (NNZP, V).
+          k_blk: int = 8, interpret: bool | None = None,
+          f_blk: int | None = None):
+    """SDDMM dispatch through the unified registry → blocked-layout values.
 
-    ``impl`` ∈ {"blocked", "pallas", "pallas_tuned"}.  ``interpret=None``
+    ``impl`` names a registered implementation (``dispatch.impls("sddmm")``:
+    blocked / pallas / pallas_tuned / coo).  ``interpret=None``
     auto-detects (compile on TPU, interpret elsewhere — resolved in
     :mod:`repro.kernels.ops`).  ``pallas_tuned`` requires the canonical
     :class:`MEBCRS` (the autotuner re-blocks per candidate ``k_blk``) and —
     since the blocked layout depends on the tuned ``k_blk`` — returns the
     :class:`BlockedMEBCRS` with the scores bound as values instead of a
-    bare value array.
+    bare value array (registry flag ``returns_format``).
 
     Compose with SpMM by replacing ``blocked.vals`` (see
     :func:`with_values`).
     """
-    if impl == "pallas_tuned":
-        from repro.kernels import ops
+    kwargs = {"k_blk": k_blk, "interpret": interpret}
+    if f_blk is not None:
+        kwargs["f_blk"] = f_blk
+    return _dispatch.dispatch("sddmm", impl, fmt, q, k, **kwargs)
 
-        if isinstance(fmt, BlockedMEBCRS):
-            raise ValueError("impl='pallas_tuned' needs the canonical MEBCRS "
-                             "(the autotuner re-blocks it per k_blk candidate)")
-        return ops.sddmm_tuned(fmt, q, k, interpret=interpret)
+
+# ---------------------------------------------------------------------------
+# Registry adapters — uniform (fmt_or_blocked, q, k, *, k_blk, f_blk,
+# interpret) signature.
+# ---------------------------------------------------------------------------
+
+
+def _sddmm_blocked_adapter(fmt, q, k, *, k_blk: int = 8,
+                           f_blk: int | None = None,
+                           interpret: bool | None = None):
+    del f_blk, interpret
     blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
-    if impl == "blocked":
-        return _sddmm_blocked_impl(blocked, q, k)
-    if impl == "pallas":
-        from repro.kernels import ops
+    return _sddmm_blocked_impl(blocked, q, k)
 
-        return ops.sddmm(blocked, q, k, interpret=interpret)
-    raise ValueError(f"unknown impl {impl!r}")
+
+def _sddmm_coo_adapter(fmt, q, k, *, k_blk: int = 8, f_blk: int | None = None,
+                       interpret: bool | None = None):
+    """Edge-wise oracle via host-side COO conversion → (NNZ,) edge values."""
+    del k_blk, f_blk, interpret
+    rows, cols, _ = to_coo(fmt)
+    return sddmm_coo(jnp.asarray(rows, jnp.int32),
+                     jnp.asarray(cols, jnp.int32), q, k)
+
+
+_dispatch.register("sddmm", "blocked", _sddmm_blocked_adapter,
+                   differentiable=True, batched=True)
+_dispatch.register("sddmm", "coo", _sddmm_coo_adapter)
 
 
 def with_values(blocked: BlockedMEBCRS, new_vals: jax.Array) -> BlockedMEBCRS:

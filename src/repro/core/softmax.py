@@ -17,13 +17,21 @@ from .format import BlockedMEBCRS
 __all__ = ["sparse_softmax"]
 
 
-@jax.jit
 def sparse_softmax(blocked: BlockedMEBCRS, scores: jax.Array) -> jax.Array:
     """Numerically-stable softmax per sparse row.
 
-    ``scores``: (NNZP, V) blocked-layout values (e.g. SDDMM output).
-    Returns probabilities in the same layout; masked/padding entries are 0.
+    ``scores``: (NNZP, V) blocked-layout values (e.g. SDDMM output), or
+    (H, NNZP, V) with a leading batch/head dim (per-head sparse attention)
+    — the reduction is per row per head.  Returns probabilities in the
+    same layout; masked/padding entries are 0.
     """
+    if scores.ndim == 3:
+        return jax.vmap(_sparse_softmax_2d, in_axes=(None, 0))(blocked, scores)
+    return _sparse_softmax_2d(blocked, scores)
+
+
+@jax.jit
+def _sparse_softmax_2d(blocked: BlockedMEBCRS, scores: jax.Array) -> jax.Array:
     v = blocked.vector_size
     k_blk = blocked.k_blk
     nb = blocked.num_blocks

@@ -27,7 +27,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .format import MEBCRS, BlockedMEBCRS, block_format
+from . import dispatch as _dispatch
+from .format import MEBCRS, BlockedMEBCRS, block_format, to_coo
 
 __all__ = ["spmm", "spmm_blocked", "spmm_coo_segment", "spmm_dense_ref"]
 
@@ -71,27 +72,47 @@ def spmm_coo_segment(rows, cols, vals, b, num_rows: int):
 
 
 def spmm(fmt: MEBCRS, b: jax.Array, impl: str = "blocked", k_blk: int = 8,
-         interpret: bool | None = None) -> jax.Array:
-    """SpMM dispatch. ``impl`` ∈ {"blocked", "pallas", "pallas_tuned"}.
+         interpret: bool | None = None, n_blk: int | None = None) -> jax.Array:
+    """SpMM dispatch through the unified registry (:mod:`repro.core.dispatch`).
 
-    ``interpret=None`` auto-detects: the Pallas paths compile to Mosaic on
-    a TPU backend and fall back to interpret mode elsewhere (resolved in
-    :mod:`repro.kernels.ops`); pass ``True``/``False`` to force a mode.
-    ``pallas_tuned`` sweeps/caches ``(k_blk, n_blk)`` via the autotuner and
-    requires the canonical :class:`MEBCRS` (it re-blocks per candidate).
+    ``impl`` names a registered implementation (``dispatch.impls("spmm")``
+    lists them: blocked / pallas / pallas_tuned / pallas_staged /
+    pallas_noncoalesced / coo_segment).  ``interpret=None`` auto-detects:
+    the Pallas paths compile to Mosaic on a TPU backend and fall back to
+    interpret mode elsewhere (resolved in :mod:`repro.kernels.ops`); pass
+    ``True``/``False`` to force a mode.  ``pallas_tuned`` sweeps/caches
+    ``(k_blk, n_blk)`` via the autotuner and requires the canonical
+    :class:`MEBCRS` (it re-blocks per candidate); an explicit ``n_blk``
+    overrides the column tile of the non-tuned Pallas paths.
     """
-    if impl == "blocked":
-        return spmm_blocked(fmt, b, k_blk=k_blk)
-    if impl == "pallas":
-        from repro.kernels import ops  # local import: kernels are optional
+    kwargs = {"k_blk": k_blk, "interpret": interpret}
+    if n_blk is not None:
+        kwargs["n_blk"] = n_blk
+    return _dispatch.dispatch("spmm", impl, fmt, b, **kwargs)
 
-        blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
-        return ops.spmm(blocked, b, interpret=interpret)
-    if impl == "pallas_tuned":
-        from repro.kernels import ops
 
-        if isinstance(fmt, BlockedMEBCRS):
-            raise ValueError("impl='pallas_tuned' needs the canonical MEBCRS "
-                             "(the autotuner re-blocks it per k_blk candidate)")
-        return ops.spmm_tuned(fmt, b, interpret=interpret)
-    raise ValueError(f"unknown impl {impl!r}")
+# ---------------------------------------------------------------------------
+# Registry adapters — uniform (fmt_or_blocked, b, *, k_blk, n_blk, interpret)
+# signature so every layer resolves impls identically.
+# ---------------------------------------------------------------------------
+
+
+def _spmm_blocked_adapter(fmt, b, *, k_blk: int = 8, n_blk: int | None = None,
+                          interpret: bool | None = None):
+    del n_blk, interpret  # XLA path: no column tiling / interpret mode
+    return spmm_blocked(fmt, b, k_blk=k_blk)
+
+
+def _spmm_coo_adapter(fmt, b, *, k_blk: int = 8, n_blk: int | None = None,
+                      interpret: bool | None = None):
+    """CUDA-core-class oracle via host-side COO conversion (not traceable)."""
+    del k_blk, n_blk, interpret
+    rows, cols, vals = to_coo(fmt)
+    return spmm_coo_segment(jnp.asarray(rows, jnp.int32),
+                            jnp.asarray(cols, jnp.int32),
+                            jnp.asarray(vals), b, num_rows=fmt.shape[0])
+
+
+_dispatch.register("spmm", "blocked", _spmm_blocked_adapter,
+                   differentiable=True, batched=True)
+_dispatch.register("spmm", "coo_segment", _spmm_coo_adapter)

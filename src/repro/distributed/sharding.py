@@ -37,6 +37,8 @@ __all__ = [
     "shardings_like",
     "batch_pspec",
     "cache_shardings",
+    "sparse_format_shardings",
+    "sparse_operand_pspec",
 ]
 
 
@@ -247,6 +249,42 @@ def batch_pspec(mesh: Mesh, extra_dims: int = 1) -> P:
         return P()
     bdim = axes[0] if len(axes) == 1 else axes
     return P(bdim, *(None,) * extra_dims)
+
+
+# ---------------------------------------------------------------------------
+# Sparse-op shardings (FlashSparse SpMM/SDDMM and their autodiff plans)
+# ---------------------------------------------------------------------------
+
+
+def sparse_format_shardings(fmt_tree: Any, mesh: Mesh) -> Any:
+    """Replicated shardings for a sparse-format pytree (``MEBCRS``,
+    ``BlockedMEBCRS`` or ``ADPlan``).
+
+    The pattern metadata (cols / win_ptr / mask / transpose perm) is tiny
+    next to the dense operands — §6's footprint math puts ME-BCRS at
+    ``4(W+NNZV) + 2·NNZV·V`` bytes, and the autodiff plan at ~2× that
+    (DESIGN.md §9) — and the fused kernels scalar-prefetch it whole, so
+    every device keeps the full pattern and parallelism comes from
+    sharding the **dense** operands instead (:func:`sparse_operand_pspec`).
+    This mirrors how the GNN baselines shard: graph replicated, feature
+    matrices partitioned.
+    """
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), fmt_tree)
+
+
+def sparse_operand_pspec(mesh: Mesh, *, batched: bool = False) -> P:
+    """PartitionSpec for the dense operand of a sparse op.
+
+    Rows (the contracted K dim) must stay whole per device — the kernel
+    DMAs arbitrary rows by index — so the feature/N dim takes the "model"
+    axis (TP) and an optional leading head/batch dim takes the data axes.
+    """
+    feat = "model" if "model" in mesh.shape else None
+    if not batched:
+        return P(None, feat)
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    lead = axes[0] if len(axes) == 1 else (axes or None)
+    return P(lead, None, feat)
 
 
 # decode-cache leaf name → logical axes (per cache layout in models/lm.py).

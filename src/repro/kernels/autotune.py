@@ -47,6 +47,12 @@ _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 _DEFAULT_CACHE_PATH = os.path.join(
     os.path.expanduser("~"), ".cache", "repro", "autotune_cache.json")
 
+# On-disk layout version.  v2: the stats key gained dtype + batch-size
+# fields (fp32/bf16 and batched shapes previously collided on one tuned
+# (k_blk, n_blk)) and the file became {"schema": N, "configs": {...}};
+# files with any other/missing schema are discarded wholesale.
+SCHEMA_VERSION = 2
+
 
 @dataclasses.dataclass(frozen=True)
 class TuneConfig:
@@ -69,25 +75,44 @@ def _log2_bucket(x: float) -> int:
     return max(int(x), 1).bit_length()
 
 
-def matrix_stats_key(fmt: MEBCRS, n: int, op: str, *,
-                     interpret: bool) -> str:
-    """Coarse bucket key: structurally similar (matrix, N) pairs collide."""
+def matrix_stats_key(fmt: MEBCRS, n: int, op: str, *, interpret: bool,
+                     dtype=None, batch: int = 1) -> str:
+    """Coarse bucket key: structurally similar (matrix, N) pairs collide.
+
+    ``dtype`` (of the dense operand; defaults to the format's value dtype)
+    and ``batch`` (product of leading batch/head dims, log2-bucketed) are
+    part of the key — fp32 vs bf16 and single vs batched shapes favour
+    different tiles and must not share a cached winner.
+    """
     w = fmt.num_windows
     nnzv = fmt.nnzv
     avg_vec = nnzv / max(w, 1)
+    dt = jnp_dtype_name(dtype if dtype is not None else fmt.values.dtype)
     return "|".join([
         op,
         f"v{fmt.vector_size}",
         f"w{_log2_bucket(w)}",
         f"vec{_log2_bucket(avg_vec)}",
         f"n{_log2_bucket(n)}",
+        f"dt{dt}",
+        f"b{_log2_bucket(batch)}",
         jax.default_backend(),
         "interp" if interpret else "compiled",
     ])
 
 
+def jnp_dtype_name(dtype) -> str:
+    return np.dtype(dtype).name
+
+
 class AutotuneCache:
-    """Persistent JSON cache ``{stats_key: TuneConfig}`` with atomic saves."""
+    """Persistent JSON cache ``{stats_key: TuneConfig}`` with atomic saves.
+
+    On disk: ``{"schema": SCHEMA_VERSION, "configs": {key: cfg}}``.  A file
+    whose schema does not match (including the schema-less v1 layout) is
+    treated as empty — stale keys from an older bucketing scheme must not
+    satisfy new lookups.
+    """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or os.environ.get(_CACHE_ENV, _DEFAULT_CACHE_PATH)
@@ -97,7 +122,12 @@ class AutotuneCache:
         if self._data is None:
             try:
                 with open(self.path) as f:
-                    self._data = json.load(f)
+                    raw = json.load(f)
+                if (isinstance(raw, dict)
+                        and raw.get("schema") == SCHEMA_VERSION):
+                    self._data = raw.get("configs", {})
+                else:
+                    self._data = {}
             except (OSError, ValueError):
                 self._data = {}
         return self._data
@@ -112,7 +142,8 @@ class AutotuneCache:
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
         tmp = f"{self.path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
-            json.dump(data, f, indent=2, sort_keys=True)
+            json.dump({"schema": SCHEMA_VERSION, "configs": data},
+                      f, indent=2, sort_keys=True)
         os.replace(tmp, self.path)
 
 
@@ -172,11 +203,21 @@ def tune_spmm(fmt: MEBCRS, b_dense: jax.Array, *,
               n_blks: Sequence[int] = DEFAULT_N_BLKS,
               interpret: bool = True, reps: int = 3,
               cache: Optional[AutotuneCache] = None) -> TuneConfig:
-    """Pick (k_blk, n_blk) for :func:`spmm_pallas` on this matrix class."""
+    """Pick (k_blk, n_blk) for :func:`spmm_pallas` on this matrix class.
+
+    ``b_dense`` may carry a leading batch/head dim (H, K, N): the sweep
+    times a representative 2-D slice, but the batch size is part of the
+    cache bucket so batched and unbatched shapes tune independently.
+    """
     from .spmm_pallas import spmm_pallas
 
+    batch = 1
+    if b_dense.ndim == 3:
+        batch = b_dense.shape[0]
+        b_dense = b_dense[0]
     n = b_dense.shape[1]
-    key = matrix_stats_key(fmt, n, "spmm", interpret=interpret)
+    key = matrix_stats_key(fmt, n, "spmm", interpret=interpret,
+                           dtype=b_dense.dtype, batch=batch)
     return _sweep(
         fmt,
         lambda blocked, n_blk: spmm_pallas(
@@ -190,11 +231,22 @@ def tune_sddmm(fmt: MEBCRS, q: jax.Array, k: jax.Array, *,
                f_blks: Sequence[int] = DEFAULT_N_BLKS,
                interpret: bool = True, reps: int = 3,
                cache: Optional[AutotuneCache] = None) -> TuneConfig:
-    """Pick (k_blk, f_blk) for :func:`sddmm_pallas` on this matrix class."""
+    """Pick (k_blk, f_blk) for :func:`sddmm_pallas` on this matrix class.
+
+    Like :func:`tune_spmm`, ``q``/``k`` may carry a leading batch/head
+    dim; a 2-D slice is timed and the batch size keys the bucket.
+    """
     from .sddmm_pallas import sddmm_pallas
 
+    batch = 1
+    if q.ndim == 3:
+        batch = q.shape[0]
+        q = q[0]
+    if k.ndim == 3:
+        k = k[0]
     f = q.shape[1]
-    key = matrix_stats_key(fmt, f, "sddmm", interpret=interpret)
+    key = matrix_stats_key(fmt, f, "sddmm", interpret=interpret,
+                           dtype=q.dtype, batch=batch)
     return _sweep(
         fmt,
         lambda blocked, f_blk: sddmm_pallas(

@@ -17,6 +17,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.core import dispatch as _dispatch
+
 from .sddmm_pallas import sddmm_hbm_bytes, sddmm_pallas
 from .spmm_pallas import (
     spmm_hbm_bytes,
@@ -132,3 +134,71 @@ def sddmm_tuned(fmt, q, k, *, interpret: bool | None = None, cache=None,
     blocked = block_format(fmt, cfg.k_blk)
     vals = sddmm_pallas(blocked, q, k, f_blk=cfg.n_blk, interpret=interpret)
     return with_values(blocked, vals)
+
+
+# ---------------------------------------------------------------------------
+# Registry adapters (repro.core.dispatch) — uniform signatures shared with
+# the XLA adapters in core/spmm.py / core/sddmm.py.  The Pallas paths are
+# marked ``differentiable``: their gradients run through the custom_vjp
+# wrappers in repro.core.autodiff (backward = dispatched sparse ops on the
+# cached transposed format), not through tracing the kernel bodies.
+# ---------------------------------------------------------------------------
+
+
+def _ensure_blocked(fmt, k_blk: int):
+    from repro.core.format import BlockedMEBCRS, block_format
+
+    return fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
+
+
+def _require_canonical(fmt, impl: str):
+    from repro.core.format import BlockedMEBCRS
+
+    if isinstance(fmt, BlockedMEBCRS):
+        raise ValueError(f"impl={impl!r} needs the canonical MEBCRS "
+                         "(the autotuner re-blocks it per k_blk candidate)")
+    return fmt
+
+
+def _spmm_pallas_adapter(fmt, b, *, k_blk=8, n_blk=128, interpret=None):
+    return spmm(_ensure_blocked(fmt, k_blk), b, n_blk=n_blk,
+                interpret=interpret)
+
+
+def _spmm_staged_adapter(fmt, b, *, k_blk=8, n_blk=128, interpret=None):
+    return spmm_staged(_ensure_blocked(fmt, k_blk), b, n_blk=n_blk,
+                       interpret=interpret)
+
+
+def _spmm_noncoalesced_adapter(fmt, b, *, k_blk=8, n_blk=128, interpret=None):
+    return spmm_noncoalesced(_ensure_blocked(fmt, k_blk), b, n_blk=n_blk,
+                             interpret=interpret)
+
+
+def _spmm_tuned_adapter(fmt, b, *, k_blk=8, n_blk=None, interpret=None):
+    del k_blk, n_blk  # the tuner picks both
+    return spmm_tuned(_require_canonical(fmt, "pallas_tuned"), b,
+                      interpret=interpret)
+
+
+def _sddmm_pallas_adapter(fmt, q, k, *, k_blk=8, f_blk=128, interpret=None):
+    return sddmm(_ensure_blocked(fmt, k_blk), q, k, f_blk=f_blk,
+                 interpret=interpret)
+
+
+def _sddmm_tuned_adapter(fmt, q, k, *, k_blk=8, f_blk=None, interpret=None):
+    del k_blk, f_blk
+    return sddmm_tuned(_require_canonical(fmt, "pallas_tuned"), q, k,
+                       interpret=interpret)
+
+
+_dispatch.register("spmm", "pallas", _spmm_pallas_adapter, differentiable=True)
+_dispatch.register("spmm", "pallas_tuned", _spmm_tuned_adapter,
+                   differentiable=True, needs_canonical=True)
+_dispatch.register("spmm", "pallas_staged", _spmm_staged_adapter)
+_dispatch.register("spmm", "pallas_noncoalesced", _spmm_noncoalesced_adapter)
+_dispatch.register("sddmm", "pallas", _sddmm_pallas_adapter,
+                   differentiable=True)
+_dispatch.register("sddmm", "pallas_tuned", _sddmm_tuned_adapter,
+                   differentiable=True, needs_canonical=True,
+                   returns_format=True)

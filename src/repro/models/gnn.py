@@ -4,25 +4,39 @@ GCN layer:   H' = σ( Â @ H @ W )                         — SpMM
 AGNN layer:  P = softmax_sparse( β · cos(h_i, h_j) )      — SDDMM + sparse
              H' = P @ H                                     softmax + SpMM
 
-Both consume the adjacency as a :class:`BlockedMEBCRS`; the SDDMM output
-feeds the SpMM in blocked layout with no re-translation (DESIGN.md §2).
-``impl`` selects the XLA blocked path or the Pallas kernels.
+The adjacency arrives either as
+
+  * an :class:`~repro.core.autodiff.ADPlan` (``ad_plan(fmt, impl=...)``) —
+    the differentiable path: every sparse op runs through the custom_vjp
+    wrappers, so ``jax.grad`` of the loss executes the dispatched kernels
+    backward too (transpose-SpMM on the cached Aᵀ, masked SDDMM), for any
+    registry impl including ``pallas``/``pallas_tuned``; or
+  * a bare :class:`BlockedMEBCRS` — forward-only convenience: ops dispatch
+    through the registry directly; training still works for the natively
+    differentiable XLA ``blocked`` impl (plain tracing), which is the
+    historical behavior.
+
+``cfg.impl`` is honored by **both** SpMM and SDDMM via the unified
+dispatch registry (:mod:`repro.core.dispatch`).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict
+from typing import Any, Dict, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import BlockedMEBCRS, sddmm, spmm_blocked, with_values
+from repro.core import BlockedMEBCRS, with_values
+from repro.core import dispatch as sparse_dispatch
+from repro.core.autodiff import ADPlan, sddmm_ad, spmm_ad
 from repro.core.softmax import sparse_softmax
 
-__all__ = ["GNNConfig", "init_gcn", "gcn_forward", "init_agnn",
+__all__ = ["GNNConfig", "Adjacency", "init_gcn", "gcn_forward", "init_agnn",
            "agnn_forward", "gnn_loss", "make_train_step"]
+
+Adjacency = Union[ADPlan, BlockedMEBCRS]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,7 +46,9 @@ class GNNConfig:
     hidden_dim: int = 128           # paper: 128 (GCN), 32 (AGNN)
     num_classes: int = 16
     num_layers: int = 5             # paper: 5-layer GCN
-    impl: str = "blocked"           # "blocked" | "pallas"
+    impl: str = "blocked"           # any registry impl: "blocked" | "pallas"
+                                    # | "pallas_tuned" | ...
+    interpret: Any = None           # None = auto (compile on TPU)
     dtype: Any = jnp.float32
 
 
@@ -48,19 +64,41 @@ def init_gcn(key: jax.Array, cfg: GNNConfig) -> Dict:
                   for i, k in enumerate(keys)]}
 
 
-def _aggregate(adj: BlockedMEBCRS, h: jax.Array, impl: str) -> jax.Array:
-    if impl == "pallas":
-        from repro.kernels import ops
-        return ops.spmm(adj, h)
-    return spmm_blocked(adj, h)
+def _aggregate(adj: Adjacency, h: jax.Array, cfg: GNNConfig,
+               vals: jax.Array | None = None) -> jax.Array:
+    """SpMM aggregation through the registry, honoring ``cfg.impl``.
+
+    ``vals`` rebinds the sparse values (AGNN attention probabilities);
+    ``None`` uses the adjacency's own values.
+    """
+    if isinstance(adj, ADPlan):
+        v = adj.vals if vals is None else vals
+        return spmm_ad(adj, v, h, impl=cfg.impl, interpret=cfg.interpret)
+    blocked = adj if vals is None else with_values(adj, vals)
+    return sparse_dispatch.dispatch("spmm", cfg.impl, blocked, h,
+                                    k_blk=blocked.k_blk,
+                                    interpret=cfg.interpret)
 
 
-def gcn_forward(params: Dict, adj: BlockedMEBCRS, x: jax.Array,
+def _edge_scores(adj: Adjacency, q: jax.Array, k: jax.Array,
+                 cfg: GNNConfig) -> jax.Array:
+    """SDDMM through the registry, honoring ``cfg.impl``."""
+    if isinstance(adj, ADPlan):
+        return sddmm_ad(adj, q, k, impl=cfg.impl, interpret=cfg.interpret)
+    return sparse_dispatch.dispatch("sddmm", cfg.impl, adj, q, k,
+                                    k_blk=adj.k_blk, interpret=cfg.interpret)
+
+
+def _pattern(adj: Adjacency) -> BlockedMEBCRS:
+    return adj.fwd if isinstance(adj, ADPlan) else adj
+
+
+def gcn_forward(params: Dict, adj: Adjacency, x: jax.Array,
                 cfg: GNNConfig) -> jax.Array:
     h = x
     n_layers = len(params["w"])
     for i, w in enumerate(params["w"]):
-        h = _aggregate(adj, h, cfg.impl)        # feature aggregation (SpMM)
+        h = _aggregate(adj, h, cfg)             # feature aggregation (SpMM)
         h = h @ w                               # feature update (dense)
         if i < n_layers - 1:
             h = jax.nn.relu(h)
@@ -76,14 +114,14 @@ def init_agnn(key: jax.Array, cfg: GNNConfig) -> Dict:
     }
 
 
-def agnn_forward(params: Dict, adj: BlockedMEBCRS, x: jax.Array,
+def agnn_forward(params: Dict, adj: Adjacency, x: jax.Array,
                  cfg: GNNConfig) -> jax.Array:
     h = jax.nn.relu(x @ params["w_in"])
     for beta in params["beta"]:
         hn = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
-        scores = sddmm(adj, hn, hn, impl=cfg.impl)       # cosine via SDDMM
-        p = sparse_softmax(adj, beta * scores)           # sparse attention
-        h = _aggregate(with_values(adj, p), h, cfg.impl)  # SpMM aggregation
+        scores = _edge_scores(adj, hn, hn, cfg)          # cosine via SDDMM
+        p = sparse_softmax(_pattern(adj), beta * scores)  # sparse attention
+        h = _aggregate(adj, h, cfg, vals=p.astype(h.dtype))  # SpMM aggregation
     return h @ params["w_out"]
 
 
@@ -99,14 +137,9 @@ def gnn_loss(params, adj, x, labels, train_mask, cfg: GNNConfig):
 
 
 def make_train_step(cfg: GNNConfig, lr: float = 1e-2):
-    """Plain SGD-with-momentum train step for the GNN examples."""
+    """GNN train step — delegates to :mod:`repro.train.train_step`, which
+    validates ``cfg.impl``'s ``differentiable`` capability via the
+    registry before tracing."""
+    from repro.train.train_step import make_gnn_train_step
 
-    @partial(jax.jit, static_argnums=())
-    def step(params, mom, adj, x, labels, train_mask):
-        (loss, acc), grads = jax.value_and_grad(gnn_loss, has_aux=True)(
-            params, adj, x, labels, train_mask, cfg)
-        mom = jax.tree.map(lambda m, g: 0.9 * m + g, mom, grads)
-        params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
-        return params, mom, loss, acc
-
-    return step
+    return make_gnn_train_step(cfg, lr=lr)

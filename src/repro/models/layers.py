@@ -169,6 +169,61 @@ def attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
     return out.reshape(b, sq, hq, -1)
 
 
+# ------------------------------------------------- FlashSparse attention --
+
+
+def sparse_attention(pattern, q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     impl: Optional[str] = None,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Block-sparse attention on the FlashSparse pipeline:
+    SDDMM → sparse softmax → SpMM, all in ME-BCRS blocked layout.
+
+    ``q``/``k``/``v``: (S, D) single-head or (H, S, D) per-head batch —
+    the pattern (local window + strided global, etc.) is shared across
+    heads, the scores/probabilities are per-head.
+
+    ``pattern`` is an :class:`~repro.core.autodiff.ADPlan` (differentiable
+    through any registry impl — ``blocked``, ``pallas``, ``pallas_tuned`` —
+    with the backward running the dispatched transpose-SpMM/SDDMM duality)
+    or a bare :class:`BlockedMEBCRS` (XLA ``blocked`` path only, natively
+    differentiable by tracing).
+    """
+    from repro.core import with_values
+    from repro.core.autodiff import ADPlan, sddmm_ad, spmm_ad
+    from repro.core import dispatch as sparse_dispatch
+    from repro.core.softmax import sparse_softmax
+
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    if isinstance(pattern, ADPlan):
+        scores = sddmm_ad(pattern, q, k, impl=impl, interpret=interpret)
+        probs = sparse_softmax(pattern.fwd, scores * scale)
+        return spmm_ad(pattern, probs.astype(v.dtype), v, impl=impl,
+                       interpret=interpret)
+
+    impl = impl or "blocked"
+    if impl != "blocked":
+        # Pallas impls differentiate (and pallas_tuned re-blocks) only via
+        # the plan; fail here with the remedy, not inside grad tracing.
+        raise ValueError(
+            f"sparse_attention with a bare BlockedMEBCRS supports only "
+            f"impl='blocked'; build an ADPlan (ad_plan(fmt, impl={impl!r})) "
+            f"for the Pallas paths")
+    sparse_dispatch.require("sddmm", impl, differentiable=True)
+
+    def one_head(qh, kh, vh):
+        scores = sparse_dispatch.dispatch("sddmm", impl, pattern, qh, kh,
+                                          k_blk=pattern.k_blk,
+                                          interpret=interpret)
+        probs = sparse_softmax(pattern, scores * scale)
+        return sparse_dispatch.dispatch(
+            "spmm", impl, with_values(pattern, probs.astype(vh.dtype)), vh,
+            k_blk=pattern.k_blk, interpret=interpret)
+
+    if q.ndim == 2:
+        return one_head(q, k, v)
+    return jnp.stack([one_head(q[i], k[i], v[i]) for i in range(q.shape[0])])
+
+
 # -------------------------------------------------------------- GQA block --
 
 

@@ -43,7 +43,7 @@ from .optimizer import AdamWConfig, adamw_init, adamw_update
 f32 = jnp.float32
 
 __all__ = ["TrainStepConfig", "init_train_state", "make_train_step",
-           "compressed_psum"]
+           "make_gnn_train_step", "compressed_psum"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +136,55 @@ def make_train_step(cfg: ArchConfig, ts: TrainStepConfig
         return new_state, metrics
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# GNN train step (paper §4.4 end-to-end case)
+# ---------------------------------------------------------------------------
+
+
+def make_gnn_train_step(cfg, lr: float = 1e-2):
+    """SGD-with-momentum train step for the GNN models.
+
+    Validates ``cfg.impl`` against the sparse-op dispatch registry before
+    tracing: the impl must carry the ``differentiable`` capability flag
+    (XLA ``blocked`` natively; the Pallas impls via the custom_vjp wrappers
+    in :mod:`repro.core.autodiff`, which require the adjacency to arrive
+    as an ``ADPlan``).  A non-differentiable impl (e.g. the staged
+    ablation baselines) fails here with the list of usable ones, instead
+    of deep inside tracing.
+
+    ``step(params, mom, adj, x, labels, train_mask)`` — ``adj`` is an
+    ``ADPlan`` or ``BlockedMEBCRS`` pytree, jit-traced like any operand.
+    """
+    from repro.core import dispatch as sparse_dispatch
+    from repro.core.autodiff import ADPlan
+    from repro.models.gnn import gnn_loss
+
+    sparse_dispatch.require("spmm", cfg.impl, differentiable=True)
+    if cfg.model == "agnn":
+        sparse_dispatch.require("sddmm", cfg.impl, differentiable=True)
+
+    @jax.jit
+    def jit_step(params, mom, adj, x, labels, train_mask):
+        (loss, acc), grads = jax.value_and_grad(gnn_loss, has_aux=True)(
+            params, adj, x, labels, train_mask, cfg)
+        mom = jax.tree.map(lambda m, g: 0.9 * m + g, mom, grads)
+        params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+        return params, mom, loss, acc
+
+    def step(params, mom, adj, x, labels, train_mask):
+        # The Pallas impls differentiate only through the custom_vjp
+        # wrappers, which need the ADPlan's cached transpose; catch a bare
+        # blocked adjacency here instead of deep inside grad tracing.
+        if cfg.impl != "blocked" and not isinstance(adj, ADPlan):
+            raise ValueError(
+                f"impl={cfg.impl!r} trains only through an ADPlan adjacency "
+                f"(build one with ad_plan(fmt, impl={cfg.impl!r})); got "
+                f"{type(adj).__name__}")
+        return jit_step(params, mom, adj, x, labels, train_mask)
+
+    return step
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,128 @@
+"""Unified (op, impl) dispatch registry: resolution, flags, call log,
+and the sparse-op sharding helpers."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch, from_dense, sddmm, spmm
+
+
+def make_fmt(seed=0, m=40, k=36, density=0.25):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    a *= rng.random((m, k)) < density
+    return a, from_dense(a, vector_size=8)
+
+
+def test_every_layer_resolves_the_same_table():
+    """core.spmm/core.sddmm are thin shims over the registry: the impl
+    lists match and unknown impls fail with the available set."""
+    assert {"blocked", "pallas", "pallas_tuned", "pallas_staged",
+            "pallas_noncoalesced", "coo_segment"} <= set(dispatch.impls("spmm"))
+    assert {"blocked", "pallas", "pallas_tuned", "coo"} <= \
+        set(dispatch.impls("sddmm"))
+    with pytest.raises(ValueError, match="unknown impl .* available"):
+        dispatch.get("spmm", "nope")
+
+
+def test_capability_flags():
+    assert dispatch.get("spmm", "blocked").differentiable
+    assert dispatch.get("spmm", "blocked").batched
+    assert dispatch.get("spmm", "pallas").differentiable
+    assert not dispatch.get("spmm", "pallas").batched  # per-slice loop path
+    assert dispatch.get("spmm", "pallas_tuned").needs_canonical
+    assert not dispatch.get("spmm", "pallas_staged").differentiable
+    assert dispatch.get("sddmm", "pallas_tuned").returns_format
+    with pytest.raises(ValueError, match="not differentiable"):
+        dispatch.require("spmm", "pallas_staged", differentiable=True)
+    with pytest.raises(ValueError, match="no native batched"):
+        dispatch.require("spmm", "pallas", batched=True)
+
+
+def test_all_spmm_impls_agree(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "t.json"))
+    a, fmt = make_fmt()
+    b = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (36, 16)).astype(np.float32))
+    ref = a @ np.asarray(b)
+    for impl in ("blocked", "pallas", "pallas_staged",
+                 "pallas_noncoalesced", "coo_segment"):
+        out = spmm(fmt, b, impl=impl, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4,
+                                   atol=2e-4, err_msg=impl)
+
+
+def test_call_log_records_dispatches():
+    a, fmt = make_fmt(seed=2)
+    b = jnp.ones((36, 8), jnp.float32)
+    q = jnp.ones((40, 8), jnp.float32)
+    with dispatch.record_calls() as log:
+        spmm(fmt, b, impl="blocked")
+        sddmm(fmt, q, jnp.ones((36, 8), jnp.float32), impl="pallas",
+              interpret=True)
+    assert log == [("spmm", "blocked"), ("sddmm", "pallas")]
+    with dispatch.record_calls() as log2:
+        pass
+    assert log2 == []  # recorder scoped to its context
+
+
+def test_gnn_train_step_validates_impl_capability():
+    from repro.models.gnn import GNNConfig, make_train_step
+
+    make_train_step(GNNConfig(impl="pallas"))  # differentiable: ok
+    with pytest.raises(ValueError, match="not differentiable"):
+        make_train_step(GNNConfig(impl="pallas_staged"))
+    with pytest.raises(ValueError, match="unknown impl"):
+        make_train_step(GNNConfig(impl="typo"))
+
+
+def test_gnn_train_step_requires_plan_for_pallas():
+    """A Pallas impl with a bare blocked adjacency must fail fast with the
+    ad_plan remedy — not with a NotImplementedError deep in grad tracing."""
+    from repro.core import block_format
+    from repro.models.gnn import GNNConfig, init_gcn, make_train_step
+    from repro.models.layers import sparse_attention
+
+    a, fmt = make_fmt(seed=5, m=32, k=32)
+    blocked = block_format(fmt, 8)
+    cfg = GNNConfig(model="gcn", in_dim=8, hidden_dim=8, num_classes=3,
+                    num_layers=2, impl="pallas", interpret=True)
+    params = init_gcn(jax.random.key(0), cfg)
+    mom = jax.tree.map(jnp.zeros_like, params)
+    step = make_train_step(cfg, lr=0.1)
+    x = jnp.ones((32, 8), jnp.float32)
+    labels = jnp.zeros((32,), jnp.int32)
+    mask = jnp.ones((32,), jnp.float32)
+    with pytest.raises(ValueError, match="ADPlan"):
+        step(params, mom, blocked, x, labels, mask)
+
+    q = jnp.ones((32, 8), jnp.float32)
+    with pytest.raises(ValueError, match="ADPlan"):
+        sparse_attention(blocked, q, q, q, impl="pallas", interpret=True)
+
+
+def test_sparse_sharding_helpers():
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core import block_format
+    from repro.core.autodiff import ad_plan
+    from repro.distributed.sharding import (
+        sparse_format_shardings,
+        sparse_operand_pspec,
+    )
+
+    _, fmt = make_fmt(seed=3)
+    plan = ad_plan(fmt, impl="blocked")
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    sh = sparse_format_shardings(plan, mesh)
+    for leaf in jax.tree.leaves(sh):
+        assert leaf.spec == P()  # pattern metadata replicates
+    sh_b = sparse_format_shardings(block_format(fmt, 8), mesh)
+    assert all(s.spec == P() for s in jax.tree.leaves(sh_b))
+    assert sparse_operand_pspec(mesh) == P(None, "model")
+    assert sparse_operand_pspec(mesh, batched=True) == \
+        P("data", None, "model")
