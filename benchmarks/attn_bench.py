@@ -1,0 +1,93 @@
+"""Fused sparse-attention benchmark: megakernel vs 3-dispatch staged.
+
+Times the single-pass SDDMM→softmax→SpMM megakernel
+(``attention/pallas_fused_attn``, one ``(H, W)`` grid launch, scores
+resident in VMEM) against the staged pipeline
+(``attention/pallas_staged``: SDDMM kernel → XLA sparse softmax → SpMM
+kernel, the (NNZP, V) score tensor round-tripping HBM twice between the
+three dispatches) per head count, and emits the machine-readable
+``BENCH_attn.json`` perf record (median ms + modeled HBM bytes per
+op/impl/matrix/H).  CI floor-checks the staged/fused HBM-reduction
+geomean and that fused traffic is strictly below staged on **every**
+shape — the megakernel's acceptance criterion.
+
+  PYTHONPATH=src python -m benchmarks.run --op attn [--scale 0.002]
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import dispatch as sparse_dispatch
+from repro.core.format import block_format, from_coo
+from repro.kernels.ops import attention_hbm_bytes
+
+from .common import attach_bench_json, suite, time_fn, write_csv
+
+IMPL_FUSED = "pallas_fused_attn"
+IMPL_STAGED = "pallas_staged"
+HEADS = (1, 4)
+D_HEAD = 32
+
+
+def _bench_matrix(g, heads) -> list:
+    rng = np.random.default_rng(0)
+    fmt = from_coo(g.rows, g.cols, g.vals, (g.num_nodes, g.num_nodes),
+                   vector_size=8)
+    blocked = block_format(fmt, 8)
+    m = g.num_nodes
+    recs = []
+    for h in heads:
+        q = jnp.asarray(rng.standard_normal((h, m, D_HEAD)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((h, m, D_HEAD)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((h, m, D_HEAD)).astype(np.float32))
+        for impl, model_impl in ((IMPL_FUSED, "fused"),
+                                 (IMPL_STAGED, "staged")):
+            fn = lambda: sparse_dispatch.dispatch(
+                "attention", impl, blocked, q, k, v, interpret=True)
+            ms = time_fn(fn, reps=3, warmup=1)
+            hbm = attention_hbm_bytes(blocked, D_HEAD, D_HEAD, h=h,
+                                      impl=model_impl)
+            recs.append({
+                "op": "attn",
+                "impl": impl,
+                "matrix": g.name,
+                "h": h,
+                # h is part of the shape key so fused/staged records pair
+                # up per head count in the BENCH summary
+                "shape": [m, m, D_HEAD, h],
+                "nnz": int(g.num_edges),
+                "median_ms": round(ms, 3),
+                "hbm_bytes": int(hbm),
+            })
+            print(f"  {g.name:16s} H={h} {impl:18s} {ms:8.2f} ms | "
+                  f"{hbm / 1e6:8.2f} MB modeled")
+    return recs
+
+
+def run(scale: float = 0.02, heads=HEADS):
+    # interpret-mode Pallas executes the kernel bodies in Python: keep the
+    # matrix subset small (same reasoning as the fig15 ablation).
+    graphs = suite(scale=min(scale, 0.005))[:3]
+    recs = []
+    for g in graphs:
+        recs.extend(_bench_matrix(g, heads))
+
+    fused = {tuple(r["shape"]) + (r["matrix"],): r["hbm_bytes"]
+             for r in recs if r["impl"] == IMPL_FUSED}
+    violations = [r for r in recs if r["impl"] == IMPL_STAGED
+                  and r["hbm_bytes"] <= fused[tuple(r["shape"])
+                                              + (r["matrix"],)]]
+    result = {}
+    if violations:
+        print(f"  WARNING: fused HBM not below staged on "
+              f"{len(violations)} shapes")
+    attach_bench_json(
+        result, recs, "BENCH_attn.json", op="attn",
+        fused_impl=IMPL_FUSED, baseline_impl=IMPL_STAGED,
+        extra_summary={
+            "hbm_strictly_below_staged_everywhere": not violations})
+    write_csv("attn.csv", recs)
+    return {**result, "rows": recs}

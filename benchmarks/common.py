@@ -97,12 +97,16 @@ def geomean(xs: Iterable[float]) -> float:
 
 
 def emit_bench_json(recs: Sequence[Dict], path: str, *, op: str,
-                    fused_impl: str, baseline_impl: str) -> Dict:
+                    fused_impl: str, baseline_impl: str,
+                    extra_summary: Dict = None) -> Dict:
     """Write a machine-readable BENCH_*.json and return its summary.
 
     ``recs`` are per-(matrix, shape, impl) records carrying ``hbm_bytes``;
     the summary aggregates the staged-baseline / fused traffic ratio that
-    CI floor-checks (see .github/workflows/ci.yml).
+    CI floor-checks (see .github/workflows/ci.yml).  ``extra_summary``
+    entries are folded into the persisted summary (e.g. per-shape
+    strictness flags the bench computed itself, so CI asserts them
+    without re-deriving the record pairing).
     """
     import json
 
@@ -114,6 +118,7 @@ def emit_bench_json(recs: Sequence[Dict], path: str, *, op: str,
         "hbm_reduction_geomean_staged_vs_fused": geomean(ratios),
         "hbm_reduction_min_staged_vs_fused": min(ratios) if ratios else 0.0,
         "num_records": len(recs),
+        **(extra_summary or {}),
     }
     with open(path, "w") as f:
         json.dump({"op": op, "summary": summary, "records": list(recs)},
@@ -123,10 +128,12 @@ def emit_bench_json(recs: Sequence[Dict], path: str, *, op: str,
 
 def attach_bench_json(result: Dict, recs: Sequence[Dict], path: str, *,
                       op: str, fused_impl: str, baseline_impl: str,
+                      extra_summary: Dict = None,
                       verbose: bool = True) -> Dict:
     """Emit BENCH_*.json and fold its summary into a run() result dict."""
     summary = emit_bench_json(recs, path, op=op, fused_impl=fused_impl,
-                              baseline_impl=baseline_impl)
+                              baseline_impl=baseline_impl,
+                              extra_summary=extra_summary)
     summary["path"] = path
     result["bench"] = summary
     if verbose:

@@ -31,27 +31,42 @@ BENCHES = {
     "fig16": ("gnn_e2e", "Fig. 16/Table 8 — end-to-end GNN"),
 }
 
-# --op modes: gradient (fwd+bwd) trajectories through the autodiff layer,
-# emitting BENCH_grad.json (DESIGN.md §9).  Not part of the default suite —
-# select explicitly, e.g. ``--op grad_spmm``.
+# --op modes, not part of the default figure suite — select explicitly:
+#   grad_spmm / grad_sddmm — gradient (fwd+bwd) trajectories through the
+#     autodiff layer, incl. batched (H, ...) grids vs the per-slice loop,
+#     emitting BENCH_grad.json (DESIGN.md §9);
+#   attn — fused sparse-attention megakernel vs the staged 3-dispatch
+#     pipeline, emitting BENCH_attn.json (DESIGN.md §10).
 GRAD_OPS = {
     "grad_spmm": "spmm",
     "grad_sddmm": "sddmm",
 }
+OP_MODES = sorted(GRAD_OPS) + ["attn"]
 
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--only", default=None,
                    help="comma-separated subset of: " + ",".join(BENCHES))
-    p.add_argument("--op", default=None, choices=sorted(GRAD_OPS),
-                   help="run a gradient benchmark mode instead of the "
-                        "figure suite (writes BENCH_grad.json)")
+    p.add_argument("--op", default=None, choices=OP_MODES,
+                   help="run an op benchmark mode instead of the figure "
+                        "suite (writes BENCH_grad.json / BENCH_attn.json)")
     p.add_argument("--quick", action="store_true")
     p.add_argument("--scale", type=float, default=None)
     args = p.parse_args(argv)
 
     scale = args.scale or (0.005 if args.quick else 0.02)
+
+    if args.op == "attn":
+        from benchmarks import attn_bench
+
+        print("\n=== §10 fused attention — megakernel vs staged ===")
+        t0 = time.time()
+        out = attn_bench.run(scale=scale)
+        out.pop("rows", None)
+        print(f"\n=== summary ({time.time() - t0:.0f}s) ===")
+        print(json.dumps(out, indent=2, default=str))
+        return 0
 
     if args.op is not None:
         from benchmarks import grad_bench

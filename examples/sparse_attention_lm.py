@@ -4,16 +4,21 @@ The paper's operators are GNN-flavoured; this example shows the same
 SDDMM → sparse-softmax → SpMM pipeline serving as *sparse attention* in a
 transformer: a fixed block-sparse causal pattern (local window + strided
 global, BigBird-ish) is stored as ME-BCRS at V=8 granularity; attention
-scores are computed only at the nonzero pattern (SDDMM), row-normalized
-(sparse softmax), and aggregated (SpMM).
+scores are computed only at the nonzero pattern, row-normalized, and
+aggregated.
 
-The layer lives in ``repro.models.layers.sparse_attention`` and runs
-per-head batched on an autodiff plan, so ``--impl pallas``/``pallas_tuned``
-executes the fused kernels and ``jax.grad`` flows through the
-transpose-SpMM/SDDMM backward duality (DESIGN.md §9) — validated here
-against dense masked attention, values *and* gradients.
+The layer lives in ``repro.models.layers.sparse_attention``.  With
+``--impl pallas``/``pallas_tuned`` it executes the **single-pass fused
+megakernel** (DESIGN.md §10): one ``(H, W)`` grid launch computes SDDMM
+scores into VMEM, applies the row-segment online softmax, and accumulates
+against V — the scores never exist in HBM — and ``jax.grad`` flows through
+the FlashAttention-style recompute backward onto the batched transpose-
+SpMM/SDDMM duality kernels.  Validated here against dense masked
+attention, values *and* gradients, plus (``--steps N``) a tiny training
+loop that recovers a value projection through the fused gradient path.
 
-  PYTHONPATH=src python examples/sparse_attention_lm.py [--impl pallas]
+  PYTHONPATH=src python examples/sparse_attention_lm.py \
+      [--impl pallas] [--steps 1]
 """
 
 import argparse
@@ -23,6 +28,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch as sparse_dispatch
 from repro.core import from_coo
 from repro.core.autodiff import ad_plan
 from repro.models.layers import sparse_attention
@@ -40,12 +46,50 @@ def block_sparse_causal_pattern(seq: int, window: int = 64, stride: int = 128):
     return np.asarray(rows), np.asarray(cols)
 
 
+def train_value_projection(plan, q, k, v, impl: str, steps: int,
+                           lr: float = 0.05):
+    """Recover a value projection W from attention outputs by SGD — every
+    step's forward is the fused megakernel (for Pallas impls) and its
+    backward the dispatched sparse duality kernels."""
+    d = v.shape[-1]
+    target = sparse_attention(plan, q, k, v, impl=impl)
+    w = jnp.asarray(np.random.default_rng(1).standard_normal((d, d))
+                    .astype(np.float32)) * 0.1
+
+    def loss_fn(w_):
+        out = sparse_attention(plan, q, k, v @ w_, impl=impl)
+        return jnp.mean((out - target) ** 2)
+
+    loss_grad = jax.jit(jax.value_and_grad(loss_fn))
+    with sparse_dispatch.record_calls() as log:
+        loss0, _ = loss_grad(w)
+    if impl in ("pallas", "pallas_tuned"):
+        n_fused = log.count(("attention", "pallas_fused_attn"))
+        assert n_fused >= 1, f"train step did not hit the fused kernel: {log}"
+        n_bwd = sum(1 for _, i in log if i == "pallas_batched")
+        print(f"train step traced {n_fused} fused-megakernel forward and "
+              f"{n_bwd} batched duality-kernel backward dispatches")
+    losses = [float(loss0)]
+    for _ in range(steps):
+        loss, gw = loss_grad(w)
+        w = w - lr * gw
+        losses.append(float(loss))
+    final = float(loss_fn(w))
+    assert np.isfinite(losses).all() and np.isfinite(final), losses
+    assert final < losses[0], (losses, final)
+    print(f"train: loss {losses[0]:.5f} -> {final:.5f} over {steps} "
+          f"step(s) through impl={impl}  ✓")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--impl", default="blocked",
                     help="registry impl: blocked | pallas | pallas_tuned")
     ap.add_argument("--seq", type=int, default=512)
     ap.add_argument("--heads", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=0,
+                    help="run N training steps through the fused gradient "
+                         "path after the parity checks")
     args = ap.parse_args()
 
     seq, d, heads = args.seq, 64, args.heads
@@ -62,7 +106,11 @@ def main():
     k = jnp.asarray(rng.standard_normal((heads, seq, d)).astype(np.float32))
     v = jnp.asarray(rng.standard_normal((heads, seq, d)).astype(np.float32))
 
-    out_sparse = sparse_attention(plan, q, k, v, impl=args.impl)
+    with sparse_dispatch.record_calls() as log:
+        out_sparse = sparse_attention(plan, q, k, v, impl=args.impl)
+    if args.impl in ("pallas", "pallas_tuned"):
+        assert log == [("attention", "pallas_fused_attn")], log
+        print(f"forward: ONE fused megakernel launch for {heads} heads  ✓")
 
     # dense oracle: same mask through standard attention, per head
     mask = np.zeros((seq, seq), bool)
@@ -92,6 +140,9 @@ def main():
     np.testing.assert_allclose(np.asarray(gq), np.asarray(gq_dense),
                                rtol=2e-3, atol=2e-3)
     print("sparse-attention gradients == dense masked gradients  ✓")
+
+    if args.steps:
+        train_value_projection(plan, q, k, v, args.impl, args.steps)
 
 
 if __name__ == "__main__":

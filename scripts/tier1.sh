@@ -25,4 +25,10 @@ python -m pytest -x -q "$@"
 if [[ $# -eq 0 && "${TIER1_SMOKE:-1}" == "1" ]]; then
   python examples/gnn_train.py --steps 2 --impl pallas_tuned \
     --model gcn --scale 0.002
+
+  # Fused-attention smoke (interpret mode): LM example forward + one
+  # train step through the single-pass pallas_fused_attn megakernel —
+  # dense-oracle parity for values and gradients, one launch for all
+  # heads, decreasing loss (DESIGN.md §10).
+  python examples/sparse_attention_lm.py --impl pallas --seq 256 --steps 1
 fi

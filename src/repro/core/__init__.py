@@ -3,7 +3,7 @@ unified dispatch registry and custom_vjp autodiff layer), redundancy
 metrics."""
 
 from . import dispatch
-from .autodiff import ADPlan, ad_plan, sddmm_ad, spmm_ad
+from .autodiff import ADPlan, ad_plan, attention_ad, sddmm_ad, spmm_ad
 from .format import (
     MEBCRS,
     BlockedMEBCRS,
@@ -32,6 +32,7 @@ __all__ = [
     "ad_plan",
     "spmm_ad",
     "sddmm_ad",
+    "attention_ad",
     "dispatch",
     "block_format",
     "from_coo",

@@ -30,10 +30,21 @@ pass it through ``jit``/``grad``/``shard_map`` like the format itself.
 ``k_blk`` pinned to the forward layout), so the traced computation never
 re-enters the host-side tuner.
 
-Both wrappers accept a leading batch dim on the dense operands and/or the
-bound values (per-head sparse attention): registry impls flagged
-``batched`` are ``jax.vmap``-ed, the Pallas paths get an unrolled
-per-slice loop (one grid per head).
+All wrappers accept a leading batch dim on the dense operands and/or the
+bound values (per-head sparse attention).  The Pallas paths execute the
+**native batched grids** — ``(H, N/N_BLK, W)`` SpMM, ``(H, NB, F/F_BLK)``
+SDDMM — one kernel launch for any head count, forward and both backward
+duality ops, with the scalar-prefetch metadata shared across heads (the
+per-slice one-grid-per-head loop they used to run is gone).  XLA impls
+flagged ``batched`` in the registry are ``jax.vmap``-ed; anything else
+falls back to an unrolled per-slice loop.
+
+:func:`attention_ad` goes one step further for the SDDMM → sparse softmax
+→ SpMM composition: its forward is the single-pass fused megakernel
+(``kernels/attention_pallas.py``) whose scores never touch HBM, and its
+backward recomputes through the staged differentiable composition
+(FlashAttention-style), so the gradient still runs the dispatched
+transpose-SpMM/SDDMM duality.
 """
 
 from __future__ import annotations
@@ -49,8 +60,9 @@ import numpy as np
 from . import dispatch as _dispatch
 from .format import MEBCRS, BlockedMEBCRS, block_format
 from .sddmm import with_values
+from .softmax import sparse_softmax
 
-__all__ = ["ADPlan", "ad_plan", "spmm_ad", "sddmm_ad"]
+__all__ = ["ADPlan", "ad_plan", "spmm_ad", "sddmm_ad", "attention_ad"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -79,13 +91,19 @@ class ADPlan:
         return self.fwd.shape
 
     def transpose_vals(self, vals: jax.Array) -> jax.Array:
-        """Re-lay ``fwd``-layout values (NNZP, V) into ``bwd`` layout.
+        """Re-lay ``fwd``-layout values (NNZP, V) into ``bwd`` layout;
+        a leading head dim (H, NNZP, V) is re-laid per head.
 
         Pure gather: sources are exclusively mask-true ``fwd`` entries and
         padding targets are zeroed, so junk in masked-off input positions
         never leaks into the transpose-SpMM.
         """
-        flat = jnp.take(vals.reshape(-1), self.perm.reshape(-1), axis=0)
+        perm = self.perm.reshape(-1)
+        if vals.ndim == 3:
+            flat = jnp.take(vals.reshape(vals.shape[0], -1), perm, axis=1)
+            return (flat.reshape((vals.shape[0],) + self.bwd.vals.shape)
+                    * self.bwd.mask)
+        flat = jnp.take(vals.reshape(-1), perm, axis=0)
         return flat.reshape(self.bwd.vals.shape) * self.bwd.mask
 
     def tree_flatten(self):
@@ -201,10 +219,10 @@ def _exec_impl(impl: str) -> str:
 def _map_slices(entry, fn, batched_args, shared_args):
     """Apply ``fn(*slices, *shared)`` over a leading batch dim.
 
-    ``batched_args`` is a list of (array, is_batched).  vmap when the
-    registry flags the impl as vmap-safe; otherwise unroll one grid per
-    slice (Pallas paths: heads are few, and each slice reuses the same
-    scalar-prefetch metadata).
+    Only reached for non-Pallas impls (the Pallas paths run their native
+    batched grids, see ``_run_spmm``/``_run_sddmm``): vmap when the
+    registry flags the impl as vmap-safe, otherwise unroll one call per
+    slice.
     """
     h = next(a.shape[0] for a, ib in batched_args if ib)
     if entry.batched:
@@ -224,25 +242,33 @@ def _map_slices(entry, fn, batched_args, shared_args):
 def _run_spmm(impl, interpret, plan: ADPlan, vals, b, *, transposed: bool):
     blocked = plan.bwd if transposed else plan.fwd
     n_blk = plan.n_blk_t if transposed else plan.n_blk
-    return _dispatch.dispatch("spmm", _exec_impl(impl),
+    ex = _exec_impl(impl)
+    if ex == "pallas" and (vals.ndim == 3 or b.ndim == 3):
+        # native (H, N/N_BLK, W) grid: one launch for every head
+        ex = "pallas_batched"
+    return _dispatch.dispatch("spmm", ex,
                               with_values(blocked, vals), b,
                               k_blk=blocked.k_blk, n_blk=n_blk,
                               interpret=interpret)
 
 
 def _run_sddmm(impl, interpret, plan: ADPlan, q, k):
-    return _dispatch.dispatch("sddmm", _exec_impl(impl), plan.fwd, q, k,
+    ex = _exec_impl(impl)
+    if ex == "pallas" and (q.ndim == 3 or k.ndim == 3):
+        # native (H, NB, F/F_BLK) grid: one launch for every head
+        ex = "pallas_batched"
+    return _dispatch.dispatch("sddmm", ex, plan.fwd, q, k,
                               k_blk=plan.fwd.k_blk, f_blk=plan.f_blk,
                               interpret=interpret)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _spmm_ad(impl, interpret, plan: ADPlan, vals, b):
-    entry = _dispatch.get("spmm", _exec_impl(impl))
     vals_m = vals * plan.fwd.mask  # masked entries are structural zeros
     vb, bb = vals.ndim == 3, b.ndim == 3
-    if not (vb or bb):
+    if not (vb or bb) or _exec_impl(impl) == "pallas":
         return _run_spmm(impl, interpret, plan, vals_m, b, transposed=False)
+    entry = _dispatch.get("spmm", _exec_impl(impl))
     run = lambda v_, b_: _run_spmm(impl, interpret, plan, v_, b_,
                                    transposed=False)
     return _map_slices(entry, run, [(vals_m, vb), (b, bb)], ())
@@ -254,7 +280,6 @@ def _spmm_ad_fwd(impl, interpret, plan, vals, b):
 
 def _spmm_ad_bwd(impl, interpret, res, g):
     plan, vals, b = res
-    entry = _dispatch.get("spmm", _exec_impl(impl))
     vb, bb = vals.ndim == 3, b.ndim == 3
 
     def d_b(v_, g_):      # dB = Aᵀ G — transpose-SpMM through the registry
@@ -268,13 +293,19 @@ def _spmm_ad_bwd(impl, interpret, res, g):
     if not (vb or bb):
         db = d_b(vals, g)
         dvals = d_vals(g, b)
+    elif _exec_impl(impl) == "pallas":
+        # both duality ops on their native batched grids (g is batched
+        # whenever the forward was; one launch each, shared metadata)
+        db = d_b(vals, g)
+        db = db if bb else jnp.sum(db, axis=0)
+        dvals = d_vals(g, b)
+        dvals = dvals if vb else jnp.sum(dvals, axis=0)
     else:
-        h = g.shape[0]
+        entry = _dispatch.get("spmm", _exec_impl(impl))
         db_sl = _map_slices(entry, d_b, [(vals, vb), (g, True)], ())
         db = db_sl if bb else jnp.sum(db_sl, axis=0)
         dv_sl = _map_slices(entry, d_vals, [(g, True), (b, bb)], ())
         dvals = dv_sl if vb else jnp.sum(dv_sl, axis=0)
-        del h
     return None, dvals.astype(vals.dtype), db.astype(b.dtype)
 
 
@@ -306,10 +337,10 @@ def spmm_ad(plan: ADPlan, vals: jax.Array, b: jax.Array, *,
 
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _sddmm_ad(impl, interpret, plan: ADPlan, q, k):
-    entry = _dispatch.get("sddmm", _exec_impl(impl))
     qb, kb = q.ndim == 3, k.ndim == 3
-    if not (qb or kb):
+    if not (qb or kb) or _exec_impl(impl) == "pallas":
         return _run_sddmm(impl, interpret, plan, q, k)
+    entry = _dispatch.get("sddmm", _exec_impl(impl))
     run = lambda q_, k_: _run_sddmm(impl, interpret, plan, q_, k_)
     return _map_slices(entry, run, [(q, qb), (k, kb)], ())
 
@@ -320,22 +351,27 @@ def _sddmm_ad_fwd(impl, interpret, plan, q, k):
 
 def _sddmm_ad_bwd(impl, interpret, res, g):
     plan, q, k = res
-    entry = _dispatch.get("spmm", _exec_impl(impl))
     qb, kb = q.ndim == 3, k.ndim == 3
     mask = plan.fwd.mask
 
     def d_q(g_, k_):      # dQ = A⟨g⟩ @ K — SpMM with the cotangent bound
         return _run_spmm(impl, interpret, plan, g_ * mask, k_,
-                         transposed=False)[: q.shape[-2]]
+                         transposed=False)[..., : q.shape[-2], :]
 
     def d_k(g_, q_):      # dK = Aᵀ⟨g⟩ @ Q — transpose-SpMM
         return _run_spmm(impl, interpret, plan,
                          plan.transpose_vals(g_ * mask), q_,
-                         transposed=True)[: k.shape[-2]]
+                         transposed=True)[..., : k.shape[-2], :]
 
     if not (qb or kb):
         dq, dk = d_q(g, k), d_k(g, q)
+    elif _exec_impl(impl) == "pallas":
+        dq = d_q(g, k)
+        dq = dq if qb else jnp.sum(dq, axis=0)
+        dk = d_k(g, q)
+        dk = dk if kb else jnp.sum(dk, axis=0)
     else:
+        entry = _dispatch.get("spmm", _exec_impl(impl))
         dq_sl = _map_slices(entry, d_q, [(g, True), (k, kb)], ())
         dq = dq_sl if qb else jnp.sum(dq_sl, axis=0)
         dk_sl = _map_slices(entry, d_k, [(g, True), (q, qb)], ())
@@ -360,3 +396,81 @@ def sddmm_ad(plan: ADPlan, q: jax.Array, k: jax.Array, *,
     impl = impl or plan.impl
     _dispatch.require("sddmm", impl, differentiable=True)
     return _sddmm_ad(impl, interpret, plan, q, k)
+
+
+# ---------------------------------------------------------------------------
+# Fused sparse attention:  out = softmax_sparse(scale · mask ⊙ QKᵀ) @ V
+# ---------------------------------------------------------------------------
+
+
+def _staged_attention(impl, interpret, plan: ADPlan, q, k, v, scale):
+    """The 3-dispatch differentiable composition (scores through HBM).
+    Serves as the XLA execution path, the fused kernel's recompute
+    backward, and the parity/benchmark baseline."""
+    scores = _sddmm_ad(impl, interpret, plan, q, k)
+    probs = sparse_softmax(plan.fwd, scores * scale)
+    return _spmm_ad(impl, interpret, plan, probs.astype(v.dtype), v)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _attention_ad(impl, interpret, plan: ADPlan, q, k, v, scale):
+    return _dispatch.dispatch("attention", "pallas_fused_attn", plan.fwd,
+                              q, k, v, scale=scale, k_blk=plan.fwd.k_blk,
+                              interpret=interpret)
+
+
+def _attention_ad_fwd(impl, interpret, plan, q, k, v, scale):
+    out = _attention_ad(impl, interpret, plan, q, k, v, scale)
+    return out, (plan, q, k, v, scale)
+
+
+def _attention_ad_bwd(impl, interpret, res, g):
+    plan, q, k, v, scale = res
+    # FlashAttention-style recompute backward: re-derive scores/probs via
+    # the staged differentiable composition — its own backward is the
+    # dispatched transpose-SpMM / SDDMM duality on the batched grids — so
+    # nothing from the forward megakernel needs to be residual.
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_, s_: _staged_attention(impl, interpret, plan,
+                                                 q_, k_, v_, s_),
+        q, k, v, scale)
+    dq, dk, dv, ds = vjp(g)
+    return None, dq, dk, dv, ds
+
+
+_attention_ad.defvjp(_attention_ad_fwd, _attention_ad_bwd)
+
+
+def attention_ad(plan: ADPlan, q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 scale=None, impl: Optional[str] = None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Differentiable block-sparse attention on ``plan``'s pattern.
+
+    ``q (M, F)``, ``k (Mc, F)``, ``v (Mc, FV)`` — each optionally with a
+    leading head dim.  ``scale`` (default ``1/sqrt(F)``) may be a traced
+    scalar (e.g. AGNN's learned β); it receives a cotangent.
+
+    Pallas impls run the **single-pass fused megakernel** — per-window
+    SDDMM scores into VMEM, row-segment online softmax, SpMM accumulation
+    against V, one ``(H, W)`` launch, no HBM-resident scores/probs — with
+    a recompute backward through the dispatched duality ops.  XLA impls
+    run the staged SDDMM → sparse softmax → SpMM composition, which also
+    survives as :func:`repro.models.layers.sparse_attention_staged` for
+    parity tests and traffic benchmarks.
+
+    ``impl="pallas_tuned"`` runs the megakernel on the plan's blocked
+    layout, i.e. with the ``k_blk`` the plan's SpMM sweep picked (the
+    backward must rebind values in that layout).  The forward-only
+    attention-specific sweep lives in the registry as
+    ``("attention", "pallas_fused_attn_tuned")`` /
+    :func:`repro.kernels.ops.attention_tuned`.
+    """
+    impl = impl or plan.impl
+    _dispatch.require("spmm", impl, differentiable=True)
+    _dispatch.require("sddmm", impl, differentiable=True)
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(q.shape[-1]))
+    scale = jnp.asarray(scale, jnp.float32)
+    if _exec_impl(impl) == "pallas":
+        return _attention_ad(impl, interpret, plan, q, k, v, scale)
+    return _staged_attention(impl, interpret, plan, q, k, v, scale)

@@ -9,14 +9,22 @@ capability flags, and every layer — core dispatch, autodiff backward
 passes, models, train steps, benchmarks — resolves ``(op, impl)`` through
 the same table.
 
+Registered ops: ``spmm``, ``sddmm``, and ``attention`` (the fused
+SDDMM → sparse-softmax → SpMM pipeline — ``pallas_fused_attn`` is the
+single-pass megakernel whose scores never touch HBM, ``pallas_staged``
+the 3-dispatch baseline).
+
 Capability flags:
 
   differentiable   the impl has a gradient path: either natively (XLA
                    blocked einsum) or via :mod:`repro.core.autodiff`'s
                    custom_vjp wrappers (Pallas paths)
-  batched          safe under ``jax.vmap`` over a leading dense-operand
-                   dim (the autodiff wrappers vmap these; non-batched
-                   impls get an unrolled per-slice loop instead)
+  batched          handles a leading head/batch dim in ONE call: XLA
+                   impls are safe under ``jax.vmap``; the ``*_batched``
+                   Pallas impls and the attention megakernel run native
+                   ``(H, ...)`` grids — one kernel launch for any head
+                   count.  Unflagged impls get an unrolled per-slice
+                   loop from the autodiff wrappers instead.
   tpu_only         compiled execution requires a TPU backend (no
                    interpret-mode fallback)
   needs_canonical  requires the canonical :class:`MEBCRS` (re-blocks it,

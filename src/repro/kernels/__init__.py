@@ -1,5 +1,6 @@
-"""Pallas TPU kernels for FlashSparse SpMM / SDDMM (+ jnp oracles,
-(k_blk, n_blk) autotuner)."""
+"""Pallas TPU kernels for FlashSparse SpMM / SDDMM — single-head and
+batched (H, ...) grids — plus the single-pass fused sparse-attention
+megakernel (+ jnp oracles, (k_blk, n_blk) autotuner)."""
 
 from . import autotune, ops, ref
 

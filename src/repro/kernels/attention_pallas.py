@@ -1,0 +1,280 @@
+"""Single-pass fused sparse-attention Pallas kernel (DESIGN.md §10).
+
+SDDMM → row softmax → SpMM in **one** grid cell per (head, window): the
+FlashAttention online-softmax pattern specialized to the ME-BCRS blocked
+layout.  The key structural fact making this a *local* fusion is that a
+sparse attention row (query token) lives in exactly one V-row window, and
+*all* of that window's nonzero vectors are owned by the window's K-block
+range ``[win_ptr[w], win_ptr[w+1])`` — so a single grid cell walking those
+blocks sees every score of its V rows and can finish their softmax without
+any cross-cell communication.
+
+Per K-block the cell DMAs the sampled K rows *and* the matching V rows
+(same scalar-prefetched column ids, one descriptor batch, double-buffered),
+computes the (K_BLK, V) score tile on the MXU, folds it into running
+per-row (max, sum) statistics, and accumulates the rescaled probability
+tile against the V rows into a VMEM-resident (V, DV) accumulator:
+
+    s      = K_rows @ (scale·Q_w)ᵀ          masked → -FLT_MAX
+    m'     = max(m, max_k s)                α = exp(m - m')
+    p      = exp(s - m') ⊙ mask
+    l      = α·l + Σ_k p
+    acc    = α·acc + pᵀ @ V_rows
+
+The epilogue divides by ``max(l, 1e-20)`` (matching
+:func:`repro.core.softmax.sparse_softmax`'s empty-row semantics) and casts
+— scores and probabilities **never exist in HBM**.  The 3-dispatch
+pipeline (SDDMM kernel → XLA sparse softmax → SpMM kernel), which round-
+trips the full (NNZP, V) score tensor through HBM twice, survives as
+:func:`attention_pallas_staged` — the baseline for the Fig. 12-style
+traffic model :func:`attention_hbm_bytes` and for parity tests.
+
+Grid ``(H, W)``: one launch for any head count, metadata shared across
+heads; Q/K/V may each be per-head (leading H) or shared.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "attention_pallas",
+    "attention_pallas_staged",
+    "attention_hbm_bytes",
+]
+
+_NEG = float(jnp.finfo(jnp.float32).min)  # same sentinel as sparse_softmax
+
+
+def _fused_attn_kernel(win_ptr_ref, cols_ref, q_ref, k_hbm, v_hbm, maskf_hbm,
+                       o_ref, acc_ref, m_ref, l_ref, k_buf, v_buf, mask_buf,
+                       sems, *, k_blk: int, k_batched: bool, v_batched: bool):
+    h = pl.program_id(0)
+    w = pl.program_id(1)
+    kh = h if k_batched else 0      # static: shared operands read slice 0
+    vh = h if v_batched else 0
+    lo = win_ptr_ref[w]
+    hi = win_ptr_ref[w + 1]
+
+    def block_copies(blk, slot):
+        """DMA descriptors for K-block ``blk``: the (K_BLK, V) mask tile
+        plus K_BLK K-row and V-row slices at the block's column ids."""
+        base = blk * k_blk
+        cps = [pltpu.make_async_copy(
+            maskf_hbm.at[pl.ds(base, k_blk), :],
+            mask_buf.at[slot],
+            sems.at[slot, 0],
+        )]
+        for r in range(k_blk):
+            c = cols_ref[base + r]
+            cps.append(pltpu.make_async_copy(
+                k_hbm.at[kh, pl.ds(c, 1), :],
+                k_buf.at[slot, pl.ds(r, 1)],
+                sems.at[slot, 1],
+            ))
+            cps.append(pltpu.make_async_copy(
+                v_hbm.at[vh, pl.ds(c, 1), :],
+                v_buf.at[slot, pl.ds(r, 1)],
+                sems.at[slot, 2],
+            ))
+        return cps
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, _NEG)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    qwin = q_ref[0].astype(jnp.float32)                      # (V, D) scaled Q
+
+    @pl.when(lo < hi)
+    def _warmup():
+        for cp in block_copies(lo, 0):
+            cp.start()
+
+    def body(blk, carry):
+        slot = jax.lax.rem(blk - lo, 2)
+
+        @pl.when(blk + 1 < hi)
+        def _prefetch_next():
+            for cp in block_copies(blk + 1, 1 - slot):
+                cp.start()
+
+        for cp in block_copies(blk, slot):
+            cp.wait()
+
+        maskf = mask_buf[slot]                               # (K_BLK, V) f32
+        s = jax.lax.dot_general(                             # (K_BLK, V)
+            k_buf[slot].astype(jnp.float32), qwin,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s = jnp.where(maskf > 0, s, _NEG)
+        m_new = jnp.maximum(m_ref[...],
+                            jnp.max(s, axis=0, keepdims=True))   # (1, V)
+        alpha = jnp.exp(m_ref[...] - m_new)                      # (1, V)
+        p = jnp.exp(s - m_new) * maskf                           # (K_BLK, V)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=0, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha.T + jax.lax.dot_general(
+            p, v_buf[slot].astype(jnp.float32),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                        # (V, DV)
+        m_ref[...] = m_new
+        return carry
+
+    jax.lax.fori_loop(lo, hi, body, 0)
+    # Fused epilogue: normalize and cast in-kernel.  Empty windows / fully
+    # masked rows keep l = 0 → output 0, matching sparse_softmax ∘ SpMM.
+    denom = jnp.maximum(l_ref[...], 1e-20)                       # (1, V)
+    o_ref[...] = (acc_ref[...] / denom.T).astype(o_ref.dtype)[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_windows", "v", "k_blk", "h", "q_batched",
+                     "k_batched", "v_batched", "interpret"),
+)
+def _fused_attn_call(win_ptr, cols, q3, k3, v3, maskf, *, num_windows, v,
+                     k_blk, h, q_batched, k_batched, v_batched, interpret):
+    d = q3.shape[-1]
+    dv = v3.shape[-1]
+    grid = (h, num_windows)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, v, d),
+                lambda hh, w, wp, c: ((hh if q_batched else 0), w, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # K stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # V stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # mask (f32) stays in HBM
+        ],
+        out_specs=pl.BlockSpec((1, v, dv), lambda hh, w, wp, c: (hh, w, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((v, dv), jnp.float32),        # output accumulator
+            pltpu.VMEM((1, v), jnp.float32),         # running row max
+            pltpu.VMEM((1, v), jnp.float32),         # running row sum
+            pltpu.VMEM((2, k_blk, d), k3.dtype),     # K-rows double-buffer
+            pltpu.VMEM((2, k_blk, dv), v3.dtype),    # V-rows double-buffer
+            pltpu.VMEM((2, k_blk, v), jnp.float32),  # mask double-buffer
+            pltpu.SemaphoreType.DMA((2, 3)),
+        ],
+    )
+    kernel = functools.partial(
+        _fused_attn_kernel, k_blk=k_blk, k_batched=k_batched,
+        v_batched=v_batched)
+    out_shape = jax.ShapeDtypeStruct((h, num_windows * v, dv), v3.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(win_ptr, cols, q3, k3, v3, maskf)
+
+
+def attention_pallas(blocked, q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     scale=None, interpret: bool = True) -> jax.Array:
+    """Single-pass fused sparse attention over a :class:`BlockedMEBCRS`.
+
+    ``q (M, D)``, ``k (Mc, D)``, ``v (Mc, DV)`` — each optionally with a
+    leading head dim H; any mix of per-head and shared operands runs in
+    **one** ``(H, W)`` grid launch.  ``scale`` defaults to ``1/sqrt(D)``
+    and may be a traced scalar (it is folded into Q before the kernel —
+    the scores themselves never exist outside VMEM).  Returns ``(M, DV)``
+    or ``(H, M, DV)`` in ``v`` dtype.
+    """
+    vsz = blocked.vector_size
+    w = blocked.num_windows
+    m, _ = blocked.shape
+    qb, kb, vb = q.ndim == 3, k.ndim == 3, v.ndim == 3
+    batched = qb or kb or vb
+    h = next((x.shape[0] for x, f in ((q, qb), (k, kb), (v, vb)) if f), 1)
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+
+    q3 = qs if qb else qs[None]
+    k3 = k if kb else k[None]
+    v3 = v if vb else v[None]
+    qpad = jnp.zeros((q3.shape[0], w * vsz, q.shape[-1]), q.dtype
+                     ).at[:, : q3.shape[1], :].set(q3)
+    maskf = blocked.mask.astype(jnp.float32)
+
+    out = _fused_attn_call(
+        blocked.win_ptr, blocked.cols, qpad, k3, v3, maskf,
+        num_windows=w, v=vsz, k_blk=blocked.k_blk, h=h,
+        q_batched=qb, k_batched=kb, v_batched=vb, interpret=interpret,
+    )
+    out = out[:, :m, :]
+    return out if batched else out[0]
+
+
+def attention_pallas_staged(blocked, q: jax.Array, k: jax.Array,
+                            v: jax.Array, *, scale=None, n_blk: int = 128,
+                            f_blk: int = 128,
+                            interpret: bool = True) -> jax.Array:
+    """3-dispatch baseline: SDDMM kernel → XLA sparse softmax → SpMM kernel.
+
+    The (NNZP, V) score tensor is written to HBM by the SDDMM, re-read and
+    re-written by the softmax, and re-read by the SpMM — the traffic the
+    fused kernel eliminates.  Batched operands use the batched kernels, so
+    fused-vs-staged comparisons isolate the *fusion* win, not batching.
+    """
+    from repro.core.sddmm import with_values
+    from repro.core.softmax import sparse_softmax
+
+    from .sddmm_pallas import sddmm_pallas_batched
+    from .spmm_pallas import spmm_pallas_batched
+
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = sddmm_pallas_batched(blocked, q, k, f_blk=f_blk,
+                                  interpret=interpret)
+    probs = sparse_softmax(blocked, scores * scale)
+    return spmm_pallas_batched(with_values(blocked, probs.astype(v.dtype)),
+                               v, n_blk=n_blk, interpret=interpret)
+
+
+def attention_hbm_bytes(blocked, d: int, dv: int, *, h: int = 1,
+                        impl: str = "fused", value_bytes: int = 4) -> int:
+    """Modeled HBM bytes moved by one sparse-attention call under ``impl``.
+
+    ``fused``: per head, the Q window tiles are read once, each sampled
+    K row and V row is DMA'd exactly once per owning block, the f32 mask
+    is read once per block, and the output is written once.  **No scores
+    or probabilities tensor appears** — that is the entire difference.
+
+    ``staged``: the 3-dispatch pipeline additionally writes the (NNZP, V)
+    f32 scores (SDDMM epilogue), re-reads and re-writes them (sparse
+    softmax, plus its segment-stats traffic), and re-reads the
+    probabilities inside the SpMM — four extra score-sized HBM passes per
+    head that the fused kernel keeps resident in VMEM.
+    """
+    from .sddmm_pallas import sddmm_hbm_bytes
+    from .spmm_pallas import spmm_hbm_bytes
+
+    v = blocked.vector_size
+    nnzp = int(blocked.cols.shape[0])
+    w = blocked.num_windows
+    meta = 4 * (w + 1) + 4 * nnzp                 # win_ptr + cols
+
+    if impl == "fused":
+        q_bytes = w * v * d * value_bytes         # Q window tiles, once
+        kv_pass = nnzp * (d + dv) * value_bytes   # K + V rows, once per block
+        mask_bytes = nnzp * v * 4                 # f32 mask per block
+        out_bytes = w * v * dv * value_bytes      # output written once
+        return h * (q_bytes + kv_pass + mask_bytes + out_bytes) + meta
+    if impl == "staged":
+        score_bytes = nnzp * v * 4                # fp32 (NNZP, V) in HBM
+        softmax_pass = 2 * score_bytes + nnzp * v  # read + write + bool mask
+        per_head = (sddmm_hbm_bytes(blocked, d, f_blk=d, impl="fused")
+                    + softmax_pass
+                    + spmm_hbm_bytes(blocked, dv, n_blk=dv, impl="fused"))
+        return h * per_head
+    raise ValueError(f"unknown impl {impl!r}")

@@ -37,6 +37,7 @@ __all__ = [
     "matrix_stats_key",
     "tune_spmm",
     "tune_sddmm",
+    "tune_attention",
     "default_cache",
 ]
 
@@ -206,23 +207,27 @@ def tune_spmm(fmt: MEBCRS, b_dense: jax.Array, *,
     """Pick (k_blk, n_blk) for :func:`spmm_pallas` on this matrix class.
 
     ``b_dense`` may carry a leading batch/head dim (H, K, N): the sweep
-    times a representative 2-D slice, but the batch size is part of the
-    cache bucket so batched and unbatched shapes tune independently.
+    then times the **batched** ``(H, N/N_BLK, W)`` grid on the full batch
+    (one launch per candidate, the path batched callers actually run), and
+    the batch size is part of the cache bucket so batched and unbatched
+    shapes tune independently.
     """
-    from .spmm_pallas import spmm_pallas
+    from .spmm_pallas import spmm_pallas, spmm_pallas_batched
 
     batch = 1
     if b_dense.ndim == 3:
         batch = b_dense.shape[0]
-        b_dense = b_dense[0]
-    n = b_dense.shape[1]
+        run = lambda blocked, n_blk: spmm_pallas_batched(
+            blocked, b_dense, n_blk=n_blk, interpret=interpret)
+    else:
+        run = lambda blocked, n_blk: spmm_pallas(
+            blocked, b_dense, n_blk=n_blk, interpret=interpret)
+    n = b_dense.shape[-1]
     key = matrix_stats_key(fmt, n, "spmm", interpret=interpret,
                            dtype=b_dense.dtype, batch=batch)
     return _sweep(
-        fmt,
-        lambda blocked, n_blk: spmm_pallas(
-            blocked, b_dense, n_blk=n_blk, interpret=interpret),
-        n, key, k_blks=k_blks, n_blks=n_blks, reps=reps, cache=cache,
+        fmt, run, n, key, k_blks=k_blks, n_blks=n_blks, reps=reps,
+        cache=cache,
     )
 
 
@@ -234,22 +239,50 @@ def tune_sddmm(fmt: MEBCRS, q: jax.Array, k: jax.Array, *,
     """Pick (k_blk, f_blk) for :func:`sddmm_pallas` on this matrix class.
 
     Like :func:`tune_spmm`, ``q``/``k`` may carry a leading batch/head
-    dim; a 2-D slice is timed and the batch size keys the bucket.
+    dim; the batched ``(H, NB, F/F_BLK)`` grid is then timed on the full
+    batch and the batch size keys the bucket.
     """
-    from .sddmm_pallas import sddmm_pallas
+    from .sddmm_pallas import sddmm_pallas, sddmm_pallas_batched
 
     batch = 1
-    if q.ndim == 3:
-        batch = q.shape[0]
-        q = q[0]
-    if k.ndim == 3:
-        k = k[0]
-    f = q.shape[1]
+    if q.ndim == 3 or k.ndim == 3:
+        batch = q.shape[0] if q.ndim == 3 else k.shape[0]
+        run = lambda blocked, f_blk: sddmm_pallas_batched(
+            blocked, q, k, f_blk=f_blk, interpret=interpret)
+    else:
+        run = lambda blocked, f_blk: sddmm_pallas(
+            blocked, q, k, f_blk=f_blk, interpret=interpret)
+    f = q.shape[-1]
     key = matrix_stats_key(fmt, f, "sddmm", interpret=interpret,
                            dtype=q.dtype, batch=batch)
     return _sweep(
+        fmt, run, f, key, k_blks=k_blks, n_blks=f_blks, reps=reps,
+        cache=cache,
+    )
+
+
+def tune_attention(fmt: MEBCRS, q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   k_blks: Sequence[int] = DEFAULT_K_BLKS,
+                   interpret: bool = True, reps: int = 3,
+                   cache: Optional[AutotuneCache] = None) -> TuneConfig:
+    """Pick ``k_blk`` for the fused sparse-attention megakernel.
+
+    The ``(H, W)`` grid keeps whole K/V rows resident per K-block, so the
+    only free tile parameter is the block depth; the returned
+    ``TuneConfig.n_blk`` records the (fixed) value head dim for the cache
+    record.  ``q``/``k``/``v`` may carry a leading head dim — the sweep
+    times the single batched launch, and H keys the bucket.
+    """
+    from .attention_pallas import attention_pallas
+
+    batch = next((x.shape[0] for x in (q, k, v) if x.ndim == 3), 1)
+    d = q.shape[-1]
+    dv = v.shape[-1]
+    key = matrix_stats_key(fmt, d, "attn", interpret=interpret,
+                           dtype=q.dtype, batch=batch)
+    return _sweep(
         fmt,
-        lambda blocked, f_blk: sddmm_pallas(
-            blocked, q, k, f_blk=f_blk, interpret=interpret),
-        f, key, k_blks=k_blks, n_blks=f_blks, reps=reps, cache=cache,
+        lambda blocked, _dv: attention_pallas(blocked, q, k, v,
+                                              interpret=interpret),
+        dv, key, k_blks=k_blks, n_blks=(dv,), reps=reps, cache=cache,
     )

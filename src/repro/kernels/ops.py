@@ -19,10 +19,16 @@ import jax
 
 from repro.core import dispatch as _dispatch
 
-from .sddmm_pallas import sddmm_hbm_bytes, sddmm_pallas
+from .attention_pallas import (
+    attention_hbm_bytes,
+    attention_pallas,
+    attention_pallas_staged,
+)
+from .sddmm_pallas import sddmm_hbm_bytes, sddmm_pallas, sddmm_pallas_batched
 from .spmm_pallas import (
     spmm_hbm_bytes,
     spmm_pallas,
+    spmm_pallas_batched,
     spmm_pallas_noncoalesced,
     spmm_pallas_staged,
 )
@@ -30,13 +36,19 @@ from .spmm_pallas import (
 __all__ = [
     "spmm",
     "sddmm",
+    "spmm_batched",
+    "sddmm_batched",
+    "attention",
+    "attention_staged",
     "spmm_noncoalesced",
     "spmm_staged",
     "spmm_tuned",
     "spmm_tuned_plan",
     "sddmm_tuned",
+    "attention_tuned",
     "spmm_hbm_bytes",
     "sddmm_hbm_bytes",
+    "attention_hbm_bytes",
 ]
 
 
@@ -74,6 +86,54 @@ def sddmm(blocked, q, k, *, f_blk: int = 128, interpret: bool | None = None):
                         interpret=_resolve_interpret(interpret))
 
 
+def spmm_batched(blocked, b_dense, *, n_blk: int = 128,
+                 interpret: bool | None = None):
+    """Batched SpMM: one (H, N/N_BLK, W) grid for any head count."""
+    return spmm_pallas_batched(blocked, b_dense, n_blk=n_blk,
+                               interpret=_resolve_interpret(interpret))
+
+
+def sddmm_batched(blocked, q, k, *, f_blk: int = 128,
+                  interpret: bool | None = None):
+    """Batched SDDMM: one (H, NB, F/F_BLK) grid for any head count."""
+    return sddmm_pallas_batched(blocked, q, k, f_blk=f_blk,
+                                interpret=_resolve_interpret(interpret))
+
+
+def attention(blocked, q, k, v, *, scale=None, interpret: bool | None = None):
+    """Single-pass fused sparse attention (SDDMM→softmax→SpMM megakernel)."""
+    return attention_pallas(blocked, q, k, v, scale=scale,
+                            interpret=_resolve_interpret(interpret))
+
+
+def attention_staged(blocked, q, k, v, *, scale=None, n_blk: int = 128,
+                     f_blk: int = 128, interpret: bool | None = None):
+    """3-dispatch sparse-attention baseline (scores round-trip HBM)."""
+    return attention_pallas_staged(blocked, q, k, v, scale=scale,
+                                   n_blk=n_blk, f_blk=f_blk,
+                                   interpret=_resolve_interpret(interpret))
+
+
+def attention_tuned(fmt, q, k, v, *, scale=None, interpret: bool | None = None,
+                    cache=None, k_blks=None):
+    """Autotuned fused attention: sweep/cache k_blk, then run the megakernel.
+
+    ``fmt`` must be the canonical :class:`~repro.core.format.MEBCRS` (the
+    tuner re-blocks it per candidate ``k_blk``).
+    """
+    from repro.core.format import block_format
+
+    from . import autotune
+
+    interpret = _resolve_interpret(interpret)
+    kwargs = {} if k_blks is None else {"k_blks": k_blks}
+    cfg = autotune.tune_attention(fmt, q, k, v, interpret=interpret,
+                                  cache=cache, **kwargs)
+    blocked = block_format(fmt, cfg.k_blk)
+    return attention_pallas(blocked, q, k, v, scale=scale,
+                            interpret=interpret)
+
+
 def spmm_tuned_plan(fmt, b_dense, *, interpret: bool | None = None,
                     cache=None, k_blks=None, n_blks=None):
     """Resolve the tuned execution plan: ``(cfg, blocked)``.
@@ -101,12 +161,14 @@ def spmm_tuned(fmt, b_dense, *, interpret: bool | None = None, cache=None,
     """Autotuned SpMM: sweep/cache (k_blk, n_blk), then run the fused kernel.
 
     ``fmt`` must be the canonical :class:`~repro.core.format.MEBCRS` (the
-    tuner re-blocks it per candidate ``k_blk``).
+    tuner re-blocks it per candidate ``k_blk``).  A batched ``(H, K, N)``
+    operand runs the batched grid — the same path the sweep timed.
     """
     cfg, blocked = spmm_tuned_plan(fmt, b_dense, interpret=interpret,
                                    cache=cache, k_blks=k_blks, n_blks=n_blks)
-    return spmm_pallas(blocked, b_dense, n_blk=cfg.n_blk,
-                       interpret=_resolve_interpret(interpret))
+    run = spmm_pallas_batched if b_dense.ndim == 3 else spmm_pallas
+    return run(blocked, b_dense, n_blk=cfg.n_blk,
+               interpret=_resolve_interpret(interpret))
 
 
 def sddmm_tuned(fmt, q, k, *, interpret: bool | None = None, cache=None,
@@ -132,7 +194,9 @@ def sddmm_tuned(fmt, q, k, *, interpret: bool | None = None, cache=None,
     cfg = autotune.tune_sddmm(fmt, q, k, interpret=interpret, cache=cache,
                               **kwargs)
     blocked = block_format(fmt, cfg.k_blk)
-    vals = sddmm_pallas(blocked, q, k, f_blk=cfg.n_blk, interpret=interpret)
+    run = (sddmm_pallas_batched if (q.ndim == 3 or k.ndim == 3)
+           else sddmm_pallas)
+    vals = run(blocked, q, k, f_blk=cfg.n_blk, interpret=interpret)
     return with_values(blocked, vals)
 
 
@@ -192,13 +256,61 @@ def _sddmm_tuned_adapter(fmt, q, k, *, k_blk=8, f_blk=None, interpret=None):
                        interpret=interpret)
 
 
+def _spmm_batched_adapter(fmt, b, *, k_blk=8, n_blk=128, interpret=None):
+    return spmm_batched(_ensure_blocked(fmt, k_blk), b, n_blk=n_blk,
+                        interpret=interpret)
+
+
+def _sddmm_batched_adapter(fmt, q, k, *, k_blk=8, f_blk=128, interpret=None):
+    return sddmm_batched(_ensure_blocked(fmt, k_blk), q, k, f_blk=f_blk,
+                         interpret=interpret)
+
+
+def _attention_fused_adapter(fmt, q, k, v, *, scale=None, k_blk=8,
+                             interpret=None):
+    return attention(_ensure_blocked(fmt, k_blk), q, k, v, scale=scale,
+                     interpret=interpret)
+
+
+def _attention_staged_adapter(fmt, q, k, v, *, scale=None, k_blk=8,
+                              n_blk=128, f_blk=128, interpret=None):
+    return attention_staged(_ensure_blocked(fmt, k_blk), q, k, v,
+                            scale=scale, n_blk=n_blk, f_blk=f_blk,
+                            interpret=interpret)
+
+
+def _attention_tuned_adapter(fmt, q, k, v, *, scale=None, k_blk=8,
+                             interpret=None):
+    del k_blk
+    return attention_tuned(_require_canonical(fmt, "pallas_fused_attn_tuned"),
+                           q, k, v, scale=scale, interpret=interpret)
+
+
 _dispatch.register("spmm", "pallas", _spmm_pallas_adapter, differentiable=True)
+_dispatch.register("spmm", "pallas_batched", _spmm_batched_adapter,
+                   differentiable=True, batched=True)
 _dispatch.register("spmm", "pallas_tuned", _spmm_tuned_adapter,
                    differentiable=True, needs_canonical=True)
 _dispatch.register("spmm", "pallas_staged", _spmm_staged_adapter)
 _dispatch.register("spmm", "pallas_noncoalesced", _spmm_noncoalesced_adapter)
 _dispatch.register("sddmm", "pallas", _sddmm_pallas_adapter,
                    differentiable=True)
+_dispatch.register("sddmm", "pallas_batched", _sddmm_batched_adapter,
+                   differentiable=True, batched=True)
 _dispatch.register("sddmm", "pallas_tuned", _sddmm_tuned_adapter,
                    differentiable=True, needs_canonical=True,
                    returns_format=True)
+# Sparse attention is an op in its own right: the fused megakernel never
+# materializes scores/probs in HBM (differentiable through
+# repro.core.autodiff.attention_ad — FlashAttention-style recompute
+# backward); the staged 3-dispatch pipeline is the measured baseline.
+_dispatch.register("attention", "pallas_fused_attn", _attention_fused_adapter,
+                   differentiable=True, batched=True)
+_dispatch.register("attention", "pallas_staged", _attention_staged_adapter,
+                   batched=True)
+# forward-only: the tuned sweep picks a k_blk independent of any ADPlan
+# layout, so there is no custom_vjp rebinding path (train through
+# attention_ad / impl="pallas_tuned" instead)
+_dispatch.register("attention", "pallas_fused_attn_tuned",
+                   _attention_tuned_adapter, batched=True,
+                   needs_canonical=True)

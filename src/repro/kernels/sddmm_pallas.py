@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["sddmm_pallas", "sddmm_hbm_bytes"]
+__all__ = ["sddmm_pallas", "sddmm_pallas_batched", "sddmm_hbm_bytes"]
 
 
 def _fused_sddmm_kernel(block_win_ref, cols_ref, q_ref, k_hbm, mask_ref,
@@ -135,6 +135,141 @@ def sddmm_pallas(blocked, q: jax.Array, k: jax.Array, *, f_blk: int = 128,
     return _fused_sddmm_call(
         blocked.block_win, blocked.cols, qpad, k_padded, blocked.mask,
         v=v, k_blk=blocked.k_blk, f_blk=f_blk, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched (head-major) variant: grid (H, NB, F / F_BLK).  One launch for
+# any number of heads, scalar-prefetch metadata shared across the grid.
+# Q and/or K may carry a leading per-head dim; shared operands are passed
+# as a single (1, ...) slice (no H-fold HBM broadcast).  Per-(h, b, fi)
+# cell the arithmetic matches :func:`_fused_sddmm_kernel` exactly, so the
+# batched launch is bitwise-equal to the per-slice loop it replaces.
+# ---------------------------------------------------------------------------
+
+
+def _batched_sddmm_kernel(block_win_ref, cols_ref, q_ref, k_hbm, mask_ref,
+                          o_ref, acc_ref, k_buf, sems, *,
+                          k_blk: int, f_blk: int, nf: int, k_batched: bool):
+    h = pl.program_id(0)
+    b = pl.program_id(1)
+    fi = pl.program_id(2)
+    kh = h if k_batched else 0      # static: shared K reads slice 0
+    base = b * k_blk
+
+    def row_copies(tile_fi, slot):
+        return [
+            pltpu.make_async_copy(
+                k_hbm.at[kh, pl.ds(cols_ref[base + r], 1),
+                         pl.ds(tile_fi * f_blk, f_blk)],
+                k_buf.at[slot, pl.ds(r, 1)],
+                sems.at[slot],
+            )
+            for r in range(k_blk)
+        ]
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        for cp in row_copies(0, 0):
+            cp.start()
+
+    slot = jax.lax.rem(fi, 2)
+
+    @pl.when(fi + 1 < nf)
+    def _prefetch_next():
+        for cp in row_copies(fi + 1, 1 - slot):
+            cp.start()
+
+    for cp in row_copies(fi, slot):
+        cp.wait()
+
+    acc_ref[...] += jax.lax.dot_general(
+        k_buf[slot].astype(jnp.float32),
+        q_ref[0].astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(fi == nf - 1)
+    def _epilogue():
+        o_ref[...] = (acc_ref[...] * mask_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("v", "k_blk", "f_blk", "h", "q_batched", "k_batched",
+                     "interpret"),
+)
+def _batched_sddmm_call(block_win, cols, q3, k3, mask, *, v, k_blk, f_blk,
+                        h, q_batched, k_batched, interpret):
+    nb = block_win.shape[0]
+    f_pad = q3.shape[-1]
+    nf = f_pad // f_blk
+    grid = (h, nb, nf)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, v, f_blk),
+                lambda hh, b, fi, bw, c: ((hh if q_batched else 0), bw[b], fi)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # K stays in HBM
+            pl.BlockSpec((k_blk, v), lambda hh, b, fi, bw, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k_blk, v),
+                               lambda hh, b, fi, bw, c: (hh, b, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((k_blk, v), jnp.float32),           # fp32 accumulator
+            pltpu.VMEM((2, k_blk, f_blk), k3.dtype),       # K-rows buffer
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out_shape = jax.ShapeDtypeStruct((h, nb * k_blk, v), q3.dtype)
+    kernel = functools.partial(
+        _batched_sddmm_kernel, k_blk=k_blk, f_blk=f_blk, nf=nf,
+        k_batched=k_batched)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(block_win, cols, q3, k3, mask)
+
+
+def sddmm_pallas_batched(blocked, q: jax.Array, k: jax.Array, *,
+                         f_blk: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """Batched gather-free SDDMM: one ``(H, NB, F/F_BLK)`` grid for H heads.
+
+    ``q``/``k`` may be ``(M, F)``/``(Mc, F)`` shared or carry a leading
+    per-head dim.  At least one operand batched returns ``(H, NNZP, V)``;
+    neither batched falls through to the single-head :func:`sddmm_pallas`.
+    Bitwise-equal to stacking H per-slice launches.
+    """
+    qb, kb = q.ndim == 3, k.ndim == 3
+    if not (qb or kb):
+        return sddmm_pallas(blocked, q, k, f_blk=f_blk, interpret=interpret)
+    h = q.shape[0] if qb else k.shape[0]
+    v = blocked.vector_size
+    w = blocked.num_windows
+    f = q.shape[-1]
+    f_blk = min(f_blk, max(f, 1))
+    f_pad = -(-f // f_blk) * f_blk
+
+    q3 = q if qb else q[None]
+    k3 = k if kb else k[None]
+    qpad = jnp.zeros((q3.shape[0], w * v, f_pad), q.dtype
+                     ).at[:, : q3.shape[1], :f].set(q3)
+    if f_pad != f:
+        k3 = jnp.pad(k3, ((0, 0), (0, 0), (0, f_pad - f)))
+
+    return _batched_sddmm_call(
+        blocked.block_win, blocked.cols, qpad, k3, blocked.mask,
+        v=v, k_blk=blocked.k_blk, f_blk=f_blk, h=h,
+        q_batched=qb, k_batched=kb, interpret=interpret,
     )
 
 

@@ -42,6 +42,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "spmm_pallas",
+    "spmm_pallas_batched",
     "spmm_pallas_noncoalesced",
     "spmm_pallas_staged",
     "spmm_hbm_bytes",
@@ -204,6 +205,150 @@ def spmm_pallas_noncoalesced(blocked, b_dense: jax.Array, *, n_blk: int = 128,
     double buffering.  Bitwise-identical results to :func:`spmm_pallas`
     (same accumulation order); only the copy scheduling differs."""
     return _spmm_fused(blocked, b_dense, n_blk, interpret, double_buffer=False)
+
+
+# ---------------------------------------------------------------------------
+# Batched (head-major) variant: grid (H, N / N_BLK, W).  One launch covers
+# any number of heads; the scalar-prefetched win_ptr / cols metadata is
+# shared across the whole grid (it describes the pattern, not the values),
+# so H heads cost zero extra metadata traffic.  Either operand may be
+# per-head (leading H dim) or shared (2-D) — shared operands are passed as
+# a single (1, ...) array and every head's grid cells DMA from slice 0, no
+# H-fold broadcast is ever materialized in HBM.  Per-(h, j, w) cell the
+# arithmetic is identical to :func:`_fused_spmm_kernel`, so the batched
+# launch is bitwise-equal to the per-slice loop it replaces.
+# ---------------------------------------------------------------------------
+
+
+def _batched_spmm_kernel(win_ptr_ref, cols_ref, vals_hbm, b_hbm, o_ref,
+                         acc_ref, vals_buf, b_buf, sems, *,
+                         k_blk: int, n_blk: int, vals_batched: bool,
+                         b_batched: bool):
+    h = pl.program_id(0)
+    j = pl.program_id(1)
+    w = pl.program_id(2)
+    vh = h if vals_batched else 0   # static: shared operands read slice 0
+    bh = h if b_batched else 0
+    lo = win_ptr_ref[w]
+    hi = win_ptr_ref[w + 1]
+
+    def block_copies(blk, slot):
+        base = blk * k_blk
+        vals_cp = pltpu.make_async_copy(
+            vals_hbm.at[vh, pl.ds(base, k_blk), :],
+            vals_buf.at[slot],
+            sems.at[slot, 0],
+        )
+        row_cps = [
+            pltpu.make_async_copy(
+                b_hbm.at[bh, pl.ds(cols_ref[base + r], 1),
+                         pl.ds(j * n_blk, n_blk)],
+                b_buf.at[slot, pl.ds(r, 1)],
+                sems.at[slot, 1],
+            )
+            for r in range(k_blk)
+        ]
+        return [vals_cp] + row_cps
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(lo < hi)
+    def _warmup():
+        for cp in block_copies(lo, 0):
+            cp.start()
+
+    def body(blk, carry):
+        slot = jax.lax.rem(blk - lo, 2)
+
+        @pl.when(blk + 1 < hi)
+        def _prefetch_next():
+            for cp in block_copies(blk + 1, 1 - slot):
+                cp.start()
+
+        for cp in block_copies(blk, slot):
+            cp.wait()
+        acc_ref[...] += jax.lax.dot_general(
+            vals_buf[slot].astype(jnp.float32),
+            b_buf[slot].astype(jnp.float32),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return carry
+
+    jax.lax.fori_loop(lo, hi, body, 0)
+    o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_windows", "v", "k_blk", "n_blk", "h",
+                     "vals_batched", "b_batched", "interpret"),
+)
+def _batched_spmm_call(win_ptr, cols, vals3, b3, *, num_windows, v, k_blk,
+                       n_blk, h, vals_batched, b_batched, interpret):
+    n_pad = b3.shape[-1]
+    grid = (h, n_pad // n_blk, num_windows)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),  # vals stay in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # B stays in HBM
+        ],
+        out_specs=pl.BlockSpec((1, v, n_blk),
+                               lambda hh, j, w, wp, c: (hh, w, j)),
+        scratch_shapes=[
+            pltpu.VMEM((v, n_blk), jnp.float32),           # fp32 accumulator
+            pltpu.VMEM((2, k_blk, v), vals3.dtype),        # vals double-buffer
+            pltpu.VMEM((2, k_blk, n_blk), b3.dtype),       # B-rows buffer
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
+    )
+    kernel = functools.partial(
+        _batched_spmm_kernel, k_blk=k_blk, n_blk=n_blk,
+        vals_batched=vals_batched, b_batched=b_batched,
+    )
+    out_shape = jax.ShapeDtypeStruct((h, num_windows * v, n_pad), b3.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(win_ptr, cols, vals3, b3)
+
+
+def spmm_pallas_batched(blocked, b_dense: jax.Array, *, n_blk: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """Batched gather-free SpMM: one ``(H, N/N_BLK, W)`` grid for H heads.
+
+    ``blocked.vals`` may be ``(NNZP, V)`` (shared pattern values) or
+    ``(H, NNZP, V)`` (per-head, e.g. attention probabilities);
+    ``b_dense`` may be ``(K, N)`` or ``(H, K, N)``.  At least one operand
+    batched returns ``(H, M, N)``; neither batched falls through to the
+    single-head :func:`spmm_pallas`.  Results are bitwise-equal to stacking
+    H per-slice launches (identical per-cell accumulation order).
+    """
+    vals = blocked.vals
+    vb, bb = vals.ndim == 3, b_dense.ndim == 3
+    if not (vb or bb):
+        return spmm_pallas(blocked, b_dense, n_blk=n_blk, interpret=interpret)
+    h = vals.shape[0] if vb else b_dense.shape[0]
+    m, _ = blocked.shape
+    n = b_dense.shape[-1]
+    n_blk = min(n_blk, max(n, 1))
+    n_pad = -(-n // n_blk) * n_blk
+    b3 = b_dense if bb else b_dense[None]
+    if n_pad != n:
+        b3 = jnp.pad(b3, ((0, 0), (0, 0), (0, n_pad - n)))
+    vals3 = vals if vb else vals[None]
+    out = _batched_spmm_call(
+        blocked.win_ptr, blocked.cols, vals3, b3,
+        num_windows=blocked.num_windows, v=blocked.vector_size,
+        k_blk=blocked.k_blk, n_blk=n_blk, h=h,
+        vals_batched=vb, b_batched=bb, interpret=interpret,
+    )
+    return out[:, :m, :n]
 
 
 # ---------------------------------------------------------------------------

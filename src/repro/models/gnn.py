@@ -1,8 +1,15 @@
 """GCN and AGNN on FlashSparse operators (paper §4.4 end-to-end case).
 
 GCN layer:   H' = σ( Â @ H @ W )                         — SpMM
-AGNN layer:  P = softmax_sparse( β · cos(h_i, h_j) )      — SDDMM + sparse
-             H' = P @ H                                     softmax + SpMM
+AGNN layer:  P = softmax_sparse( β · cos(h_i, h_j) )      — sparse attention
+             H' = P @ H                                     (q=k=ĥ, v=h,
+                                                             scale=β)
+
+With an ADPlan adjacency the AGNN layer runs the sparse-attention
+pipeline through :func:`repro.core.autodiff.attention_ad` — Pallas impls
+execute the single-pass fused megakernel (scores never leave VMEM,
+DESIGN.md §10), XLA impls the staged SDDMM → sparse softmax → SpMM
+composition.
 
 The adjacency arrives either as
 
@@ -30,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.core import BlockedMEBCRS, with_values
 from repro.core import dispatch as sparse_dispatch
-from repro.core.autodiff import ADPlan, sddmm_ad, spmm_ad
+from repro.core.autodiff import ADPlan, attention_ad, sddmm_ad, spmm_ad
 from repro.core.softmax import sparse_softmax
 
 __all__ = ["GNNConfig", "Adjacency", "init_gcn", "gcn_forward", "init_agnn",
@@ -119,9 +126,17 @@ def agnn_forward(params: Dict, adj: Adjacency, x: jax.Array,
     h = jax.nn.relu(x @ params["w_in"])
     for beta in params["beta"]:
         hn = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
-        scores = _edge_scores(adj, hn, hn, cfg)          # cosine via SDDMM
-        p = sparse_softmax(_pattern(adj), beta * scores)  # sparse attention
-        h = _aggregate(adj, h, cfg, vals=p.astype(h.dtype))  # SpMM aggregation
+        if isinstance(adj, ADPlan):
+            # softmax(β·cos) aggregation is exactly the sparse-attention
+            # pipeline with q = k = ĥ, v = h, scale = β: Pallas impls run
+            # the single-pass fused megakernel (scores never touch HBM),
+            # XLA impls the staged composition — one code path either way.
+            h = attention_ad(adj, hn, hn, h, scale=beta, impl=cfg.impl,
+                             interpret=cfg.interpret)
+        else:
+            scores = _edge_scores(adj, hn, hn, cfg)      # cosine via SDDMM
+            p = sparse_softmax(_pattern(adj), beta * scores)
+            h = _aggregate(adj, h, cfg, vals=p.astype(h.dtype))
     return h @ params["w_out"]
 
 

@@ -173,27 +173,55 @@ def attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
 
 
 def sparse_attention(pattern, q: jax.Array, k: jax.Array, v: jax.Array, *,
-                     impl: Optional[str] = None,
+                     scale=None, impl: Optional[str] = None,
                      interpret: Optional[bool] = None) -> jax.Array:
-    """Block-sparse attention on the FlashSparse pipeline:
-    SDDMM → sparse softmax → SpMM, all in ME-BCRS blocked layout.
+    """Block-sparse attention on the FlashSparse pipeline, all in ME-BCRS
+    blocked layout.
 
     ``q``/``k``/``v``: (S, D) single-head or (H, S, D) per-head batch —
     the pattern (local window + strided global, etc.) is shared across
-    heads, the scores/probabilities are per-head.
+    heads, the scores/probabilities are per-head.  ``scale`` defaults to
+    ``1/sqrt(D)`` and may be a learned traced scalar.
 
-    ``pattern`` is an :class:`~repro.core.autodiff.ADPlan` (differentiable
-    through any registry impl — ``blocked``, ``pallas``, ``pallas_tuned`` —
-    with the backward running the dispatched transpose-SpMM/SDDMM duality)
-    or a bare :class:`BlockedMEBCRS` (XLA ``blocked`` path only, natively
-    differentiable by tracing).
+    ``pattern`` is an :class:`~repro.core.autodiff.ADPlan` or a bare
+    :class:`BlockedMEBCRS`.  With an ADPlan and a Pallas impl this runs the
+    **single-pass fused megakernel** (``kernels/attention_pallas.py``):
+    per-window SDDMM scores in VMEM scratch, row-segment online softmax,
+    SpMM accumulation against V — one ``(H, W)`` grid launch for any head
+    count and no HBM-resident scores/probs tensor.  Gradients flow through
+    the FlashAttention-style recompute backward (dispatched transpose-
+    SpMM/SDDMM duality).  Every other case takes the staged 3-dispatch
+    pipeline, kept as :func:`sparse_attention_staged` for parity tests and
+    the BENCH_attn traffic comparison.
+    """
+    from repro.core.autodiff import ADPlan, attention_ad
+
+    if isinstance(pattern, ADPlan):
+        return attention_ad(pattern, q, k, v, scale=scale, impl=impl,
+                            interpret=interpret)
+    return sparse_attention_staged(pattern, q, k, v, scale=scale, impl=impl,
+                                   interpret=interpret)
+
+
+def sparse_attention_staged(pattern, q: jax.Array, k: jax.Array,
+                            v: jax.Array, *, scale=None,
+                            impl: Optional[str] = None,
+                            interpret: Optional[bool] = None) -> jax.Array:
+    """3-dispatch block-sparse attention: SDDMM → sparse softmax → SpMM.
+
+    The (NNZP, V) score tensor round-trips HBM between the dispatched ops
+    — the baseline :func:`sparse_attention` fuses away.  With an
+    :class:`~repro.core.autodiff.ADPlan` every stage is differentiable for
+    any registry impl; a bare :class:`BlockedMEBCRS` supports the natively
+    differentiable XLA ``blocked`` impl only.
     """
     from repro.core import with_values
     from repro.core.autodiff import ADPlan, sddmm_ad, spmm_ad
     from repro.core import dispatch as sparse_dispatch
     from repro.core.softmax import sparse_softmax
 
-    scale = 1.0 / math.sqrt(q.shape[-1])
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
     if isinstance(pattern, ADPlan):
         scores = sddmm_ad(pattern, q, k, impl=impl, interpret=interpret)
         probs = sparse_softmax(pattern.fwd, scores * scale)
