@@ -26,6 +26,7 @@ from repro.sparse.graphs import (
     DATASET_PRESETS,
     GraphData,
     erdos_renyi_graph,
+    hub_row_graph,
     make_dataset,
     power_law_graph,
 )
@@ -41,6 +42,14 @@ SYNTH_SUITE = [
     ("ss-pl-50k-32", 50_000, 32.0, "power_law"),
     ("ss-un-10k-4", 10_000, 4.0, "uniform"),
     ("ss-un-40k-12", 40_000, 12.0, "uniform"),
+]
+# Hub-row matrices with configurable skew exponent: the workload where the
+# window-parallel grids serialize on hub windows and the block-parallel
+# schedule (DESIGN.md §11) wins.  (name, nodes, avg_deg, zipf skew).
+SKEWED_SUITE = [
+    ("hub-1.5-5k-8", 5_000, 8.0, 1.5),
+    ("hub-2.0-5k-8", 5_000, 8.0, 2.0),
+    ("hub-1.5-20k-4", 20_000, 4.0, 1.5),
 ]
 
 
@@ -61,6 +70,75 @@ def suite(scale: float = 0.02, seed: int = 0) -> List[GraphData]:
         graphs.append(GraphData(name=name, num_nodes=n_eff, rows=rows,
                                 cols=cols, vals=vals))
     return graphs
+
+
+def skewed_suite(scale: float = 0.02, seed: int = 0
+                 ) -> List[Tuple[GraphData, float]]:
+    """Hub-row benchmark matrices: ``[(graph, skew_exponent), ...]``.
+
+    Sizes are calibrated at scale=0.02 like :func:`suite`.  Skew ≥ 1.5
+    puts every entry in the hub-dominated regime the balanced-scheduling
+    acceptance floor (CI) is checked against.
+    """
+    factor = scale / 0.02
+    out = []
+    for name, nodes, deg, skew in SKEWED_SUITE:
+        n_eff = max(int(nodes * factor), 64)
+        rows, cols = hub_row_graph(n_eff, deg, seed=seed, skew=skew)
+        vals = np.ones_like(rows, np.float32)
+        out.append((GraphData(name=name, num_nodes=n_eff, rows=rows,
+                              cols=cols, vals=vals), skew))
+    return out
+
+
+def balance_cost(blocked, n: int, *, impl: str = "window", schedule=None,
+                 n_blk: int = 128, p: int = 8, value_bytes: int = 4,
+                 fixed_cell_bytes: int = 512) -> float:
+    """Idle-cell-adjusted cost model for one SpMM (bytes-equivalent units).
+
+    The HBM models (``spmm_hbm_bytes``) count *total* traffic, which is
+    identical between the window-parallel and block-parallel kernels —
+    the schedule changes the *critical path*, not the byte count.  This
+    model charges each grid cell its DMA traffic plus a fixed issue
+    overhead, runs the cells on ``p`` parallel issue slots, and takes the
+    makespan ``max(total / p, max_cell)`` per output column tile:
+
+      * ``impl="window"`` — one cell per window (the fused kernel's
+        ragged grid): a hub window's cell carries all its K-blocks, so on
+        a skewed matrix the makespan is pinned by ``max_w blocks(w)``
+        while the other slots idle; empty windows still burn an
+        overhead-only cell.
+      * ``impl="balanced"`` — one cell per schedule segment (at most
+        ``split_blk`` K-blocks each): the hub window's work spreads over
+        many near-uniform cells, the makespan collapses toward
+        ``total / p``, and empty windows cost only their predicated zero
+        store.
+
+    The CI floor asserts window/balanced ≥ 1.3 on every skew ≥ 1.5
+    matrix in :data:`SKEWED_SUITE`.
+    """
+    v = blocked.vector_size
+    k_blk = blocked.k_blk
+    n_blk = min(n_blk, max(n, 1))
+    nj = -(-n // n_blk)
+    block_bytes = k_blk * (v + n_blk) * value_bytes   # vals tile + B rows
+    store_bytes = v * n_blk * value_bytes             # output tile store
+
+    if impl in ("window", "fused"):
+        counts = np.diff(np.asarray(blocked.win_ptr)).astype(np.int64)
+        cells = fixed_cell_bytes + counts * block_bytes + store_bytes
+    elif impl == "balanced":
+        if schedule is None:
+            schedule = blocked.schedule(1)
+        meta = np.asarray(schedule.seg_meta)
+        cells = (fixed_cell_bytes + meta[:, 1].astype(np.int64) * block_bytes
+                 + meta[:, 3] * store_bytes)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    if cells.size == 0:
+        return 0.0
+    makespan = max(float(cells.sum()) / p, float(cells.max()))
+    return nj * makespan
 
 
 def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:

@@ -36,12 +36,15 @@ BENCHES = {
 #     autodiff layer, incl. batched (H, ...) grids vs the per-slice loop,
 #     emitting BENCH_grad.json (DESIGN.md §9);
 #   attn — fused sparse-attention megakernel vs the staged 3-dispatch
-#     pipeline, emitting BENCH_attn.json (DESIGN.md §10).
+#     pipeline, emitting BENCH_attn.json (DESIGN.md §10);
+#   spmm — kernel-path records into BENCH_spmm.json; with --skewed, adds
+#     the hub-row balanced-vs-window scheduling comparison (DESIGN.md §11)
+#     whose ≥ 1.3× cost floor CI enforces.
 GRAD_OPS = {
     "grad_spmm": "spmm",
     "grad_sddmm": "sddmm",
 }
-OP_MODES = sorted(GRAD_OPS) + ["attn"]
+OP_MODES = sorted(GRAD_OPS) + ["attn", "spmm"]
 
 
 def main(argv=None) -> int:
@@ -50,12 +53,29 @@ def main(argv=None) -> int:
                    help="comma-separated subset of: " + ",".join(BENCHES))
     p.add_argument("--op", default=None, choices=OP_MODES,
                    help="run an op benchmark mode instead of the figure "
-                        "suite (writes BENCH_grad.json / BENCH_attn.json)")
+                        "suite (writes BENCH_grad.json / BENCH_attn.json / "
+                        "BENCH_spmm.json)")
+    p.add_argument("--skewed", action="store_true",
+                   help="with --op spmm: add hub-row skewed matrices and "
+                        "the balanced-vs-window scheduling comparison")
     p.add_argument("--quick", action="store_true")
     p.add_argument("--scale", type=float, default=None)
     args = p.parse_args(argv)
 
     scale = args.scale or (0.005 if args.quick else 0.02)
+
+    if args.op == "spmm":
+        from benchmarks import spmm_bench
+
+        print("\n=== §11 SpMM kernel paths"
+              + (" + block-parallel scheduling (skewed)" if args.skewed
+                 else "") + " ===")
+        t0 = time.time()
+        # interpret-mode kernel bodies run in Python → small scale
+        out = spmm_bench.run_op(scale=min(scale, 0.002), skewed=args.skewed)
+        print(f"\n=== summary ({time.time() - t0:.0f}s) ===")
+        print(json.dumps(out, indent=2, default=str))
+        return 0
 
     if args.op == "attn":
         from benchmarks import attn_bench

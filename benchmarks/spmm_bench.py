@@ -17,10 +17,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import block_format, from_coo, spmm_blocked, spmm_coo_segment
+from repro.core.format import window_skew
 from repro.core.spmm import spmm_dense_ref
 
-from .common import attach_bench_json, emit_bench_json as common_emit
-from .common import geomean, suite, time_fn, write_csv
+from .common import attach_bench_json, balance_cost
+from .common import emit_bench_json as common_emit
+from .common import geomean, skewed_suite, suite, time_fn, write_csv
 
 
 def bench_records(scale: float = 0.002, n_values=(128,),
@@ -66,16 +68,26 @@ def bench_records(scale: float = 0.002, n_values=(128,),
                 # the same tune → re-block plan users get from spmm_tuned
                 cfg, blocked_t = ops.spmm_tuned_plan(
                     fmt, b, interpret=True, k_blks=(8, 16), n_blks=(64, 128))
+                if cfg.split_blk:
+                    sched_t = blocked_t.schedule(cfg.split_blk)
+                    run_t = lambda: ops.spmm_balanced(
+                        blocked_t, b, schedule=sched_t,
+                        n_blk=cfg.n_blk, interpret=True)
+                    model_t = "balanced"
+                else:
+                    sched_t = None
+                    run_t = lambda: ops.spmm(blocked_t, b, n_blk=cfg.n_blk,
+                                             interpret=True)
+                    model_t = "fused"
                 recs.append({
                     "op": "spmm", "impl": "pallas_tuned", "matrix": g.name,
                     "shape": [shape[0], shape[1], n], "sparsity": sparsity,
                     "vector_size": 8, "k_blk": cfg.k_blk, "n_blk": cfg.n_blk,
-                    "median_ms": time_fn(
-                        lambda: ops.spmm(blocked_t, b, n_blk=cfg.n_blk,
-                                         interpret=True),
-                        reps=3, warmup=1),
+                    "split_blk": cfg.split_blk,
+                    "median_ms": time_fn(run_t, reps=3, warmup=1),
                     "hbm_bytes": ops.spmm_hbm_bytes(
-                        blocked_t, n, n_blk=cfg.n_blk, impl="fused"),
+                        blocked_t, n, n_blk=cfg.n_blk, impl=model_t,
+                        schedule=sched_t),
                 })
             if verbose:
                 by = {r["impl"]: r for r in recs
@@ -90,6 +102,112 @@ def emit_bench_json(recs, path: str = "BENCH_spmm.json") -> dict:
     """Write BENCH_spmm.json and return the aggregate summary."""
     return common_emit(recs, path, op="spmm", fused_impl="pallas_fused",
                        baseline_impl="pallas_staged")
+
+
+def skewed_records(scale: float = 0.002, n_values=(128,),
+                   split_blk: int = 1, verbose: bool = True):
+    """Balanced-vs-window records on the hub-row skewed suite.
+
+    Per (matrix, N): the window-parallel fused kernel and the
+    block-parallel balanced kernel, each with measured median ms, modeled
+    HBM bytes, and the idle-cell-adjusted :func:`balance_cost` — the
+    metric the CI floor checks (the HBM byte counts are near-identical by
+    construction; the schedule buys critical-path, not traffic).  Also
+    asserts the two kernels agree bitwise on every matrix, so the perf
+    record can never drift from a broken kernel.
+    """
+    from repro.kernels import ops
+
+    recs = []
+    for g, skew in skewed_suite(scale):
+        shape = (g.num_nodes, g.num_nodes)
+        fmt = from_coo(g.rows, g.cols, g.vals, shape, vector_size=8)
+        blocked = block_format(fmt, k_blk=8)
+        schedule = blocked.schedule(split_blk)
+        sparsity = 1.0 - g.num_edges / float(shape[0] * shape[1])
+        wskew = window_skew(fmt)
+        for n in n_values:
+            b = jnp.asarray(np.random.default_rng(0).standard_normal(
+                (g.num_nodes, n)).astype(np.float32))
+            n_blk_eff = min(128, max(n, 1))
+            out_f = ops.spmm(blocked, b, n_blk=n_blk_eff, interpret=True)
+            out_b = ops.spmm_balanced(blocked, b, schedule=schedule,
+                                      n_blk=n_blk_eff, interpret=True)
+            assert np.array_equal(np.asarray(out_f), np.asarray(out_b)), \
+                f"balanced/fused mismatch on {g.name}"
+            impls = [
+                ("pallas_fused", "fused", "window",
+                 lambda: ops.spmm(blocked, b, n_blk=n_blk_eff,
+                                  interpret=True)),
+                ("pallas_balanced", "balanced", "balanced",
+                 lambda: ops.spmm_balanced(blocked, b, schedule=schedule,
+                                           n_blk=n_blk_eff, interpret=True)),
+            ]
+            for impl, model, cost_model, fn in impls:
+                recs.append({
+                    "op": "spmm", "impl": impl, "matrix": g.name,
+                    "shape": [shape[0], shape[1], n], "sparsity": sparsity,
+                    "skew_exponent": skew, "window_skew": round(wskew, 2),
+                    "vector_size": 8, "k_blk": 8, "n_blk": n_blk_eff,
+                    "split_blk": split_blk if impl == "pallas_balanced" else 0,
+                    "median_ms": time_fn(fn, reps=3, warmup=1),
+                    "hbm_bytes": ops.spmm_hbm_bytes(
+                        blocked, n, n_blk=n_blk_eff, impl=model,
+                        schedule=schedule),
+                    "balance_cost": balance_cost(
+                        blocked, n, impl=cost_model, schedule=schedule,
+                        n_blk=n_blk_eff),
+                })
+            if verbose:
+                by = {r["impl"]: r for r in recs
+                      if r["matrix"] == g.name and r["shape"][2] == n}
+                red = (by["pallas_fused"]["balance_cost"]
+                       / max(by["pallas_balanced"]["balance_cost"], 1))
+                print(f"  {g.name:16s} N={n:3d} skew={wskew:6.1f} "
+                      f"window/balanced cost {red:.2f}x")
+    return recs
+
+
+def _skew_summary(recs) -> dict:
+    """Balanced-vs-window cost reduction over the skewed records."""
+    bal = {(r["matrix"], tuple(r["shape"])): r["balance_cost"]
+           for r in recs if r["impl"] == "pallas_balanced"}
+    ratios = [r["balance_cost"] / max(bal[(r["matrix"], tuple(r["shape"]))], 1)
+              for r in recs if r["impl"] == "pallas_fused"
+              and (r["matrix"], tuple(r["shape"])) in bal]
+    return {
+        "balanced_cost_reduction_geomean": geomean(ratios),
+        "balanced_cost_reduction_min": min(ratios) if ratios else 0.0,
+        "num_skewed_records": len(ratios) * 2,
+    }
+
+
+def run_op(scale: float = 0.002, skewed: bool = False, verbose: bool = True,
+           bench_json: str = "BENCH_spmm.json"):
+    """``benchmarks.run --op spmm [--skewed]``: emit BENCH_spmm.json.
+
+    Always contains the standard fused/staged/noncoalesced/tuned records
+    (so the staged-vs-fused HBM floor stays checkable from the same
+    artifact); ``skewed=True`` appends the hub-row balanced-vs-window
+    records and folds their cost-reduction summary in (the ≥ 1.3× CI
+    floor on skew ≥ 1.5 matrices).
+    """
+    recs = bench_records(scale=scale, verbose=verbose)
+    extra = {}
+    if skewed:
+        skew_recs = skewed_records(scale=scale, verbose=verbose)
+        recs = recs + skew_recs
+        extra = _skew_summary(skew_recs)
+    result = {}
+    attach_bench_json(result, recs, bench_json, op="spmm",
+                      fused_impl="pallas_fused",
+                      baseline_impl="pallas_staged", extra_summary=extra,
+                      verbose=verbose)
+    if skewed and verbose:
+        print(f"  skewed: window/balanced cost geomean "
+              f"{extra['balanced_cost_reduction_geomean']:.2f}x "
+              f"(min {extra['balanced_cost_reduction_min']:.2f}x)")
+    return result
 
 
 def run(scale: float = 0.02, n_values=(128, 256), include_pallas: bool = False,

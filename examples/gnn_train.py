@@ -72,7 +72,8 @@ def main():
     ap.add_argument("--epochs", type=int, default=60)
     ap.add_argument("--model", default="both", choices=["gcn", "agnn", "both"])
     ap.add_argument("--impl", default="blocked",
-                    help="registry impl: blocked | pallas | pallas_tuned")
+                    help="registry impl: blocked | pallas | pallas_balanced "
+                         "| pallas_tuned")
     ap.add_argument("--steps", type=int, default=None,
                     help="smoke mode: run STEPS steps of one small config "
                          "and assert a finite loss decrease (CI gate)")

@@ -31,4 +31,19 @@ if [[ $# -eq 0 && "${TIER1_SMOKE:-1}" == "1" ]]; then
   # dense-oracle parity for values and gradients, one launch for all
   # heads, decreasing loss (DESIGN.md §10).
   python examples/sparse_attention_lm.py --impl pallas --seq 256 --steps 1
+
+  # Block-parallel scheduling floor (DESIGN.md §11): skewed hub-row
+  # matrices through the balanced-vs-window comparison; the balanced
+  # schedule must cut the idle-cell-adjusted cost >= 1.3x on every
+  # skew >= 1.5 matrix (bitwise kernel parity is asserted inside the
+  # bench itself).
+  python -m benchmarks.run --op spmm --skewed --scale 0.002
+  python - <<'EOF'
+import json
+with open("BENCH_spmm.json") as f:
+    summary = json.load(f)["summary"]
+red = summary["balanced_cost_reduction_min"]
+print(f"skewed balanced-vs-window cost min {red:.2f}x")
+assert red >= 1.3, f"balanced scheduling floor regressed: {red}"
+EOF
 fi

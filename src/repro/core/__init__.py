@@ -7,13 +7,16 @@ from .autodiff import ADPlan, ad_plan, attention_ad, sddmm_ad, spmm_ad
 from .format import (
     MEBCRS,
     BlockedMEBCRS,
+    Schedule,
     block_format,
+    build_schedule,
     from_coo,
     from_dense,
     memory_footprint_me_bcrs,
     memory_footprint_sr_bcrs,
     to_coo,
     to_dense,
+    window_skew,
 )
 from .metrics import (
     data_access_bytes,
@@ -28,6 +31,7 @@ from .spmm import spmm, spmm_blocked, spmm_coo_segment, spmm_dense_ref
 __all__ = [
     "MEBCRS",
     "BlockedMEBCRS",
+    "Schedule",
     "ADPlan",
     "ad_plan",
     "spmm_ad",
@@ -35,6 +39,8 @@ __all__ = [
     "attention_ad",
     "dispatch",
     "block_format",
+    "build_schedule",
+    "window_skew",
     "from_coo",
     "from_dense",
     "to_dense",

@@ -58,7 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import dispatch as _dispatch
-from .format import MEBCRS, BlockedMEBCRS, block_format
+from .format import MEBCRS, BlockedMEBCRS, Schedule, block_format
 from .sddmm import with_values
 from .softmax import sparse_softmax
 
@@ -77,6 +77,12 @@ class ADPlan:
     n_blk: int            # forward SpMM column tile
     n_blk_t: int          # transpose-SpMM (dB / dK) column tile
     f_blk: int            # SDDMM feature tile (dVals / forward SDDMM)
+    # Block-parallel schedules (DESIGN.md §11), present when the impl (or
+    # the tuner, per direction) chose the balanced kernels.  A and Aᵀ are
+    # scheduled independently — the transposed format has its own skew
+    # (hub *columns* of A become hub windows of Aᵀ).
+    fwd_sched: Optional[Schedule] = None
+    bwd_sched: Optional[Schedule] = None
 
     @property
     def vals(self) -> jax.Array:
@@ -107,15 +113,17 @@ class ADPlan:
         return flat.reshape(self.bwd.vals.shape) * self.bwd.mask
 
     def tree_flatten(self):
-        return ((self.fwd, self.bwd, self.perm),
+        return ((self.fwd, self.bwd, self.perm, self.fwd_sched,
+                 self.bwd_sched),
                 (self.impl, self.n_blk, self.n_blk_t, self.f_blk))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        fwd, bwd, perm = leaves
+        fwd, bwd, perm, fwd_sched, bwd_sched = leaves
         impl, n_blk, n_blk_t, f_blk = aux
         return cls(fwd=fwd, bwd=bwd, perm=perm, impl=impl, n_blk=n_blk,
-                   n_blk_t=n_blk_t, f_blk=f_blk)
+                   n_blk_t=n_blk_t, f_blk=f_blk, fwd_sched=fwd_sched,
+                   bwd_sched=bwd_sched)
 
 
 def _blocked_perm(blocked_a: BlockedMEBCRS,
@@ -149,15 +157,21 @@ def _blocked_perm(blocked_a: BlockedMEBCRS,
 
 
 def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
-            n_blk: int = 128, f_blk: int = 128, n_example: int = 64,
-            interpret: Optional[bool] = None, cache=None) -> ADPlan:
+            n_blk: int = 128, f_blk: int = 128, split_blk: int = 1,
+            n_example: int = 64, interpret: Optional[bool] = None,
+            cache=None) -> ADPlan:
     """Build (and memoize on ``fmt``) the differentiable-op plan.
 
     Host-side precompute, like ``block_format`` — call outside ``jit``.
-    For ``impl="pallas_tuned"`` the autotuner picks ``(k_blk, n_blk)`` per
-    direction now (timing dummies of ``n_example`` feature columns in the
-    format's dtype), so traced forward/backward calls run the fused kernel
-    directly with the plan's tiles and never hit the tuner.
+    For ``impl="pallas_tuned"`` the autotuner picks ``(k_blk, n_blk,
+    split_blk)`` per direction now (timing dummies of ``n_example``
+    feature columns in the format's dtype), so traced forward/backward
+    calls run the fused kernel directly with the plan's tiles and never
+    hit the tuner.  ``impl="pallas_balanced"`` builds the block-parallel
+    :class:`Schedule` for **both** directions with ``split_blk`` (A and Aᵀ
+    scheduled independently — the transpose has its own skew); a tuned
+    plan carries a schedule for whichever direction the sweep preferred
+    balanced.
     """
     entry = _dispatch.require("spmm", impl, differentiable=True)
     del entry
@@ -174,7 +188,8 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
 
         interp = ops._resolve_interpret(interpret)
         cache_tag = getattr(cache, "path", None) if cache is not None else None
-    key = (impl, k_blk, n_blk, f_blk, int(n_example), interp, cache_tag)
+    key = (impl, k_blk, n_blk, f_blk, int(split_blk), int(n_example), interp,
+           cache_tag)
     memo = getattr(fmt, "_ad_plans", None)
     if memo is None:
         memo = {}
@@ -185,6 +200,7 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
     fmt_t = fmt.transpose()
     k_blk_f = k_blk_t = k_blk
     n_blk_t = n_blk
+    split_f = split_t = split_blk if impl == "pallas_balanced" else 0
     if impl == "pallas_tuned":
         from repro.kernels import autotune
 
@@ -200,20 +216,35 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
         k_blk_f, n_blk = cfg_f.k_blk, cfg_f.n_blk
         k_blk_t, n_blk_t = cfg_t.k_blk, cfg_t.n_blk
         f_blk = cfg_s.n_blk
+        split_f, split_t = cfg_f.split_blk, cfg_t.split_blk
 
     blocked_f = block_format(fmt, k_blk_f)
     blocked_t = block_format(fmt_t, k_blk_t)
+    # pallas_balanced always carries schedules — split_blk = 0 is the valid
+    # *unsplit* schedule, not "no schedule"; for pallas_tuned a split of 0
+    # means the sweep chose the window-parallel kernel for that direction.
+    want_f = impl == "pallas_balanced" or split_f > 0
+    want_t = impl == "pallas_balanced" or split_t > 0
     plan = ADPlan(fwd=blocked_f, bwd=blocked_t,
                   perm=jnp.asarray(_blocked_perm(blocked_f, blocked_t)),
-                  impl=impl, n_blk=n_blk, n_blk_t=n_blk_t, f_blk=f_blk)
+                  impl=impl, n_blk=n_blk, n_blk_t=n_blk_t, f_blk=f_blk,
+                  fwd_sched=blocked_f.schedule(split_f) if want_f else None,
+                  bwd_sched=blocked_t.schedule(split_t) if want_t else None)
     memo[key] = plan
     return plan
 
 
 def _exec_impl(impl: str) -> str:
     """The impl the traced computation actually runs.  ``pallas_tuned``
-    fixed its tiles at plan-build time → execute the plain fused kernel."""
+    fixed its tiles at plan-build time → execute the plain fused kernel
+    (or the balanced one — decided per direction via the plan's
+    schedules, see ``_run_spmm``)."""
     return "pallas" if impl == "pallas_tuned" else impl
+
+
+def _is_pallas(impl: str) -> bool:
+    """Pallas-family impls run native batched grids (no per-slice loop)."""
+    return _exec_impl(impl) in ("pallas", "pallas_balanced")
 
 
 def _map_slices(entry, fn, batched_args, shared_args):
@@ -242,7 +273,16 @@ def _map_slices(entry, fn, batched_args, shared_args):
 def _run_spmm(impl, interpret, plan: ADPlan, vals, b, *, transposed: bool):
     blocked = plan.bwd if transposed else plan.fwd
     n_blk = plan.n_blk_t if transposed else plan.n_blk
+    sched = plan.bwd_sched if transposed else plan.fwd_sched
     ex = _exec_impl(impl)
+    if ex == "pallas_balanced" or (impl == "pallas_tuned"
+                                   and sched is not None):
+        # block-parallel (H, N/N_BLK, NS) grid with this direction's own
+        # schedule (Aᵀ is re-scheduled: its skew differs from A's)
+        return _dispatch.dispatch("spmm", "pallas_balanced",
+                                  with_values(blocked, vals), b,
+                                  k_blk=blocked.k_blk, n_blk=n_blk,
+                                  schedule=sched, interpret=interpret)
     if ex == "pallas" and (vals.ndim == 3 or b.ndim == 3):
         # native (H, N/N_BLK, W) grid: one launch for every head
         ex = "pallas_batched"
@@ -254,6 +294,13 @@ def _run_spmm(impl, interpret, plan: ADPlan, vals, b, *, transposed: bool):
 
 def _run_sddmm(impl, interpret, plan: ADPlan, q, k):
     ex = _exec_impl(impl)
+    if ex == "pallas_balanced" or (impl == "pallas_tuned"
+                                   and plan.fwd_sched is not None):
+        # SDDMM samples A's pattern → the forward schedule's block list
+        return _dispatch.dispatch("sddmm", "pallas_balanced", plan.fwd, q, k,
+                                  k_blk=plan.fwd.k_blk, f_blk=plan.f_blk,
+                                  schedule=plan.fwd_sched,
+                                  interpret=interpret)
     if ex == "pallas" and (q.ndim == 3 or k.ndim == 3):
         # native (H, NB, F/F_BLK) grid: one launch for every head
         ex = "pallas_batched"
@@ -266,7 +313,7 @@ def _run_sddmm(impl, interpret, plan: ADPlan, q, k):
 def _spmm_ad(impl, interpret, plan: ADPlan, vals, b):
     vals_m = vals * plan.fwd.mask  # masked entries are structural zeros
     vb, bb = vals.ndim == 3, b.ndim == 3
-    if not (vb or bb) or _exec_impl(impl) == "pallas":
+    if not (vb or bb) or _is_pallas(impl):
         return _run_spmm(impl, interpret, plan, vals_m, b, transposed=False)
     entry = _dispatch.get("spmm", _exec_impl(impl))
     run = lambda v_, b_: _run_spmm(impl, interpret, plan, v_, b_,
@@ -293,7 +340,7 @@ def _spmm_ad_bwd(impl, interpret, res, g):
     if not (vb or bb):
         db = d_b(vals, g)
         dvals = d_vals(g, b)
-    elif _exec_impl(impl) == "pallas":
+    elif _is_pallas(impl):
         # both duality ops on their native batched grids (g is batched
         # whenever the forward was; one launch each, shared metadata)
         db = d_b(vals, g)
@@ -338,7 +385,7 @@ def spmm_ad(plan: ADPlan, vals: jax.Array, b: jax.Array, *,
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _sddmm_ad(impl, interpret, plan: ADPlan, q, k):
     qb, kb = q.ndim == 3, k.ndim == 3
-    if not (qb or kb) or _exec_impl(impl) == "pallas":
+    if not (qb or kb) or _is_pallas(impl):
         return _run_sddmm(impl, interpret, plan, q, k)
     entry = _dispatch.get("sddmm", _exec_impl(impl))
     run = lambda q_, k_: _run_sddmm(impl, interpret, plan, q_, k_)
@@ -365,7 +412,7 @@ def _sddmm_ad_bwd(impl, interpret, res, g):
 
     if not (qb or kb):
         dq, dk = d_q(g, k), d_k(g, q)
-    elif _exec_impl(impl) == "pallas":
+    elif _is_pallas(impl):
         dq = d_q(g, k)
         dq = dq if qb else jnp.sum(dq, axis=0)
         dk = d_k(g, q)
@@ -414,6 +461,16 @@ def _staged_attention(impl, interpret, plan: ADPlan, q, k, v, scale):
 
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _attention_ad(impl, interpret, plan: ADPlan, q, k, v, scale):
+    if _exec_impl(impl) == "pallas_balanced" or (impl == "pallas_tuned"
+                                                 and plan.fwd_sched
+                                                 is not None):
+        # balanced (H, NS) megakernel: online softmax carried across the
+        # split segments of each window via the plan's forward schedule
+        return _dispatch.dispatch("attention", "pallas_balanced", plan.fwd,
+                                  q, k, v, scale=scale,
+                                  k_blk=plan.fwd.k_blk,
+                                  schedule=plan.fwd_sched,
+                                  interpret=interpret)
     return _dispatch.dispatch("attention", "pallas_fused_attn", plan.fwd,
                               q, k, v, scale=scale, k_blk=plan.fwd.k_blk,
                               interpret=interpret)
@@ -458,6 +515,13 @@ def attention_ad(plan: ADPlan, q: jax.Array, k: jax.Array, v: jax.Array, *,
     survives as :func:`repro.models.layers.sparse_attention_staged` for
     parity tests and traffic benchmarks.
 
+    ``impl="pallas_balanced"`` (or a tuned plan whose forward sweep chose
+    a split) runs the **block-parallel** megakernel instead: the same
+    single-pass math on the uniform-segment ``(H, NS)`` grid, with the
+    online-softmax statistics carried across each window's split segments
+    (bitwise-equal outputs), and the recompute backward dispatching the
+    balanced duality kernels on each direction's own schedule.
+
     ``impl="pallas_tuned"`` runs the megakernel on the plan's blocked
     layout, i.e. with the ``k_blk`` the plan's SpMM sweep picked (the
     backward must rebind values in that layout).  The forward-only
@@ -471,6 +535,6 @@ def attention_ad(plan: ADPlan, q: jax.Array, k: jax.Array, v: jax.Array, *,
     if scale is None:
         scale = 1.0 / float(np.sqrt(q.shape[-1]))
     scale = jnp.asarray(scale, jnp.float32)
-    if _exec_impl(impl) == "pallas":
+    if _is_pallas(impl):
         return _attention_ad(impl, interpret, plan, q, k, v, scale)
     return _staged_attention(impl, interpret, plan, q, k, v, scale)

@@ -32,6 +32,11 @@ Capability flags:
   returns_format   returns a :class:`BlockedMEBCRS` with values bound
                    instead of a bare value array (tuned SDDMM: the value
                    layout depends on the tuned ``k_blk``)
+  load_balanced    the impl maps work onto uniform schedule segments
+                   (block-parallel grids, DESIGN.md §11) instead of
+                   ragged per-window loops — accepts ``schedule=`` /
+                   ``split_blk=`` kwargs and handles skewed matrices
+                   without hub-window serialization
 
 Providers self-register at import; :func:`get` lazily imports them so the
 table is complete no matter which layer touches the registry first.
@@ -74,6 +79,7 @@ class OpImpl:
     tpu_only: bool = False
     needs_canonical: bool = False
     returns_format: bool = False
+    load_balanced: bool = False
 
 
 _REGISTRY: Dict[Tuple[str, str], OpImpl] = {}

@@ -41,11 +41,14 @@ import numpy as np
 __all__ = [
     "MEBCRS",
     "BlockedMEBCRS",
+    "Schedule",
     "from_dense",
     "from_coo",
     "to_dense",
     "to_coo",
     "block_format",
+    "build_schedule",
+    "window_skew",
     "memory_footprint_me_bcrs",
     "memory_footprint_sr_bcrs",
 ]
@@ -123,8 +126,13 @@ class BlockedMEBCRS:
     ``block_win`` is the scatter view (segment-sum paths); ``win_ptr`` is the
     gather view driving the fused Pallas kernels' per-window inner loop.
     For the degenerate all-empty matrix a single dummy zero block exists so
-    every array is non-empty, but no window owns it (``win_ptr[-1] == 0``),
-    so ``win_ptr[-1] <= num_blocks`` with equality in every non-empty case.
+    the *legacy* kernels always have a non-empty array to index, but no
+    window owns it (``win_ptr[-1] == 0``), so ``win_ptr[-1] <= num_blocks``
+    with equality in every non-empty case.  The block-parallel
+    :class:`Schedule` (DESIGN.md §11) never schedules the dummy block — an
+    all-empty matrix yields a valid zero-block schedule whose segments are
+    all zero-length, and the balanced kernels write zeros in-kernel instead
+    of relying on the dummy block's zero values.
     """
 
     vals: jax.Array
@@ -153,6 +161,141 @@ class BlockedMEBCRS:
     def tree_unflatten(cls, aux, leaves):
         shape, v, k = aux
         return cls(*leaves, shape=shape, vector_size=v, k_blk=k)
+
+    def schedule(self, split_blk: int = 1) -> "Schedule":
+        """Block-parallel execution :class:`Schedule` (memoized per
+        ``split_blk``).  Host-side precompute like :func:`block_format` —
+        requires concrete (non-tracer) arrays, call outside ``jit``."""
+        memo = getattr(self, "_schedules", None)
+        if memo is None:
+            memo = {}
+            object.__setattr__(self, "_schedules", memo)
+        if split_blk not in memo:
+            memo[split_blk] = build_schedule(self, split_blk)
+        return memo[split_blk]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Block-parallel, load-balanced execution schedule (DESIGN.md §11).
+
+    The window-parallel Pallas grids give each output window one grid cell
+    with a ragged inner loop over its K-blocks: a power-law degree
+    distribution leaves most cells near-idle while hub windows dominate
+    wall-clock.  A schedule re-maps the work onto **uniform segments** of at
+    most ``split_blk`` K-blocks:
+
+      seg_win  (NS,)   int32  output window of each segment
+      seg_meta (NS, 4) int32  per segment: [first K-block, K-block count,
+                              is-first-segment-of-window,
+                              is-last-segment-of-window]
+      blk_id   (NSB,)  int32  scheduled K-blocks, in segment order (for the
+                              block-grid SDDMM; identity for any non-empty
+                              matrix since every block is owned)
+      blk_win  (NSB,)  int32  owning window of each scheduled block
+
+    Segments of one window are contiguous and emitted in ascending block
+    order, so on a sequential Pallas grid consecutive cells of one window
+    revisit the same resident output block: the balanced kernels zero their
+    accumulator on ``seg_first``, add one block's contraction per step in
+    the same ascending order as the window-parallel kernels (bitwise-equal
+    fp32 accumulation), and run the masked epilogue on ``seg_last``.
+
+    Empty windows contribute a single **zero-length** segment (count 0,
+    first = last = 1): no DMA and no MXU work are scheduled, only the zero
+    store any correct kernel must emit — this is how the degenerate
+    all-empty matrix becomes a *valid zero-block schedule* whose kernels
+    return zeros without touching the legacy dummy block.
+    """
+
+    seg_win: jax.Array
+    seg_meta: jax.Array
+    blk_id: jax.Array
+    blk_win: jax.Array
+    split_blk: int            # max K-blocks per segment (0 = unsplit)
+    num_blocks: int           # total scheduled K-blocks (0 iff all-empty)
+
+    @property
+    def num_segments(self) -> int:
+        return int(self.seg_win.shape[0])
+
+    def tree_flatten(self):
+        leaves = (self.seg_win, self.seg_meta, self.blk_id, self.blk_win)
+        return leaves, (self.split_blk, self.num_blocks)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        split_blk, num_blocks = aux
+        return cls(*leaves, split_blk=split_blk, num_blocks=num_blocks)
+
+
+def build_schedule(blocked: BlockedMEBCRS, split_blk: int = 1) -> Schedule:
+    """Split windows into ≤ ``split_blk``-block segments and elide all work
+    for empty windows (they keep one zero-length store-only segment).
+
+    ``split_blk = 0`` disables splitting — one segment per window, the
+    window-parallel work assignment expressed in schedule form (useful as
+    the autotuner's degenerate candidate).  Host-side numpy, like
+    :func:`block_format`.
+    """
+    if split_blk < 0:
+        raise ValueError(f"split_blk must be >= 0, got {split_blk}")
+    wp = np.asarray(blocked.win_ptr).astype(np.int64)
+    w = blocked.num_windows
+    counts = np.diff(wp)
+
+    # Vectorized segmentation (host precompute runs at every plan build,
+    # for A and Aᵀ — keep it O(W) numpy, not a Python loop).
+    step = np.maximum(counts, 1) if split_blk == 0 \
+        else np.full(w, split_blk, np.int64)
+    nseg = np.maximum(-(-counts // step), 1)   # empty windows keep one seg
+    seg_win = np.repeat(np.arange(w, dtype=np.int64), nseg)
+    idx = np.arange(seg_win.size) - np.repeat(np.cumsum(nseg) - nseg, nseg)
+    seg_lo = wp[seg_win] + idx * step[seg_win]
+    seg_len = np.clip(counts[seg_win] - idx * step[seg_win], 0,
+                      step[seg_win])
+    seg_lo = np.where(seg_len > 0, seg_lo, 0)  # empty: store-only segment
+    seg_first = (idx == 0).astype(np.int64)
+    seg_last = (idx == nseg[seg_win] - 1).astype(np.int64)
+
+    seg_meta = np.stack([seg_lo, seg_len, seg_first, seg_last],
+                        axis=1).astype(np.int32)
+    # Segments walk each window's contiguous block range in ascending
+    # order and windows ascend, so the scheduled-block list is exactly
+    # the owned blocks 0..win_ptr[-1) in order (the dummy block of an
+    # all-empty matrix is never scheduled).
+    blk_id = np.arange(int(wp[-1]), dtype=np.int32)
+    blk_win = np.repeat(np.arange(w, dtype=np.int32),
+                        counts).astype(np.int32)
+
+    return Schedule(
+        seg_win=jnp.asarray(seg_win.astype(np.int32)),
+        seg_meta=jnp.asarray(seg_meta),
+        blk_id=jnp.asarray(blk_id),
+        blk_win=jnp.asarray(blk_win),
+        split_blk=split_blk,
+        num_blocks=int(wp[-1]),
+    )
+
+
+def window_skew(fmt) -> float:
+    """p99 / mean of the per-window nonzero-vector counts (≥ 1.0).
+
+    The autotuner's bucket statistic (DESIGN.md §11): near 1 for uniform
+    matrices, large for power-law / hub-row matrices where a handful of
+    windows own most K-blocks — the regime where the block-parallel
+    schedule beats the window-parallel grid.  Accepts the canonical
+    :class:`MEBCRS` (``row_pointers``) or a :class:`BlockedMEBCRS`
+    (``win_ptr``; blocks-per-window is vectors-per-window / k_blk, so the
+    ratio statistic agrees between the two up to padding).
+    """
+    ptr = fmt.win_ptr if isinstance(fmt, BlockedMEBCRS) else fmt.row_pointers
+    counts = np.diff(np.asarray(ptr)).astype(np.float64)
+    mean = counts.mean() if counts.size else 0.0
+    if mean <= 0:
+        return 1.0
+    return float(max(np.percentile(counts, 99) / mean, 1.0))
 
 
 # ---------------------------------------------------------------------------

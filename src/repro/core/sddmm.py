@@ -63,17 +63,20 @@ def sddmm_coo(rows, cols, q, k):
 
 def sddmm(fmt, q: jax.Array, k: jax.Array, impl: str = "blocked",
           k_blk: int = 8, interpret: bool | None = None,
-          f_blk: int | None = None):
+          f_blk: int | None = None, split_blk: int | None = None,
+          schedule=None):
     """SDDMM dispatch through the unified registry → blocked-layout values.
 
     ``impl`` names a registered implementation (``dispatch.impls("sddmm")``:
-    blocked / pallas / pallas_tuned / coo).  ``interpret=None``
-    auto-detects (compile on TPU, interpret elsewhere — resolved in
-    :mod:`repro.kernels.ops`).  ``pallas_tuned`` requires the canonical
-    :class:`MEBCRS` (the autotuner re-blocks per candidate ``k_blk``) and —
-    since the blocked layout depends on the tuned ``k_blk`` — returns the
-    :class:`BlockedMEBCRS` with the scores bound as values instead of a
-    bare value array (registry flag ``returns_format``).
+    blocked / pallas / pallas_balanced / pallas_tuned / coo).
+    ``interpret=None`` auto-detects (compile on TPU, interpret elsewhere —
+    resolved in :mod:`repro.kernels.ops`).  ``pallas_tuned`` requires the
+    canonical :class:`MEBCRS` (the autotuner re-blocks per candidate
+    ``k_blk``) and — since the blocked layout depends on the tuned
+    ``k_blk`` — returns the :class:`BlockedMEBCRS` with the scores bound
+    as values instead of a bare value array (registry flag
+    ``returns_format``).  ``split_blk``/``schedule`` parameterize the
+    schedule-driven ``pallas_balanced`` grid (DESIGN.md §11).
 
     Compose with SpMM by replacing ``blocked.vals`` (see
     :func:`with_values`).
@@ -81,6 +84,10 @@ def sddmm(fmt, q: jax.Array, k: jax.Array, impl: str = "blocked",
     kwargs = {"k_blk": k_blk, "interpret": interpret}
     if f_blk is not None:
         kwargs["f_blk"] = f_blk
+    if split_blk is not None:
+        kwargs["split_blk"] = split_blk
+    if schedule is not None:
+        kwargs["schedule"] = schedule
     return _dispatch.dispatch("sddmm", impl, fmt, q, k, **kwargs)
 
 

@@ -72,22 +72,29 @@ def spmm_coo_segment(rows, cols, vals, b, num_rows: int):
 
 
 def spmm(fmt: MEBCRS, b: jax.Array, impl: str = "blocked", k_blk: int = 8,
-         interpret: bool | None = None, n_blk: int | None = None) -> jax.Array:
+         interpret: bool | None = None, n_blk: int | None = None,
+         split_blk: int | None = None, schedule=None) -> jax.Array:
     """SpMM dispatch through the unified registry (:mod:`repro.core.dispatch`).
 
     ``impl`` names a registered implementation (``dispatch.impls("spmm")``
-    lists them: blocked / pallas / pallas_tuned / pallas_staged /
-    pallas_noncoalesced / coo_segment).  ``interpret=None`` auto-detects:
-    the Pallas paths compile to Mosaic on a TPU backend and fall back to
-    interpret mode elsewhere (resolved in :mod:`repro.kernels.ops`); pass
-    ``True``/``False`` to force a mode.  ``pallas_tuned`` sweeps/caches
-    ``(k_blk, n_blk)`` via the autotuner and requires the canonical
-    :class:`MEBCRS` (it re-blocks per candidate); an explicit ``n_blk``
-    overrides the column tile of the non-tuned Pallas paths.
+    lists them: blocked / pallas / pallas_balanced / pallas_tuned /
+    pallas_staged / pallas_noncoalesced / coo_segment).  ``interpret=None``
+    auto-detects: the Pallas paths compile to Mosaic on a TPU backend and
+    fall back to interpret mode elsewhere (resolved in
+    :mod:`repro.kernels.ops`); pass ``True``/``False`` to force a mode.
+    ``pallas_tuned`` sweeps/caches ``(k_blk, n_blk, split_blk)`` via the
+    autotuner and requires the canonical :class:`MEBCRS` (it re-blocks per
+    candidate); an explicit ``n_blk`` overrides the column tile of the
+    non-tuned Pallas paths.  ``split_blk``/``schedule`` parameterize the
+    block-parallel ``pallas_balanced`` grid (DESIGN.md §11).
     """
     kwargs = {"k_blk": k_blk, "interpret": interpret}
     if n_blk is not None:
         kwargs["n_blk"] = n_blk
+    if split_blk is not None:
+        kwargs["split_blk"] = split_blk
+    if schedule is not None:
+        kwargs["schedule"] = schedule
     return _dispatch.dispatch("spmm", impl, fmt, b, **kwargs)
 
 

@@ -26,7 +26,14 @@ import numpy as np
 
 from repro.models.config import ArchConfig
 
-__all__ = ["SyntheticLMData", "make_batch", "input_specs", "decode_specs"]
+__all__ = [
+    "SyntheticLMData",
+    "make_batch",
+    "input_specs",
+    "decode_specs",
+    "synthetic_sparse_coo",
+    "synthetic_sparse_format",
+]
 
 
 def _rng_for(seed: int, step: int, shard: int) -> np.random.Generator:
@@ -110,3 +117,54 @@ def input_specs(cfg: ArchConfig, batch: int, seq_len: int
 def decode_specs(cfg: ArchConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
     """One-token decode input (the cache specs come from init_cache's shapes)."""
     return {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+
+
+# ----------------------------------------------------- sparse matrices -----
+# Deterministic synthetic sparse adjacencies for tests/benchmarks that need
+# a *controlled degree distribution* rather than a paper-preset replica
+# (those live in repro.sparse.graphs).  ``kind="hub_row"`` with skew ≥ 1.5
+# produces the hub-window imbalance the block-parallel scheduler
+# (DESIGN.md §11) is built for; "power_law" skews columns; "uniform" is the
+# Erdős–Rényi control.
+
+
+def synthetic_sparse_coo(num_nodes: int, avg_degree: float = 8.0,
+                         kind: str = "hub_row", skew: float = 1.5,
+                         seed: int = 0):
+    """COO triplets ``(rows, cols, vals, shape)`` of a synthetic matrix.
+
+    Pure function of its arguments (same posture as the LM batches above:
+    any host regenerates the same matrix from the seed alone).
+    """
+    from repro.sparse.graphs import (
+        erdos_renyi_graph,
+        hub_row_graph,
+        power_law_graph,
+    )
+
+    if kind == "hub_row":
+        rows, cols = hub_row_graph(num_nodes, avg_degree, seed=seed,
+                                   skew=skew)
+    elif kind == "power_law":
+        rows, cols = power_law_graph(num_nodes, avg_degree, seed=seed,
+                                     alpha=skew)
+    elif kind == "uniform":
+        rows, cols = erdos_renyi_graph(num_nodes, avg_degree, seed=seed)
+    else:
+        raise ValueError(f"unknown kind {kind!r} "
+                         "(hub_row / power_law / uniform)")
+    rng = np.random.default_rng(seed + 1)
+    vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
+    return rows, cols, vals, (num_nodes, num_nodes)
+
+
+def synthetic_sparse_format(num_nodes: int, avg_degree: float = 8.0,
+                            kind: str = "hub_row", skew: float = 1.5,
+                            seed: int = 0, vector_size: int = 8):
+    """The same matrix as :func:`synthetic_sparse_coo`, as an ME-BCRS
+    format ready for ``block_format`` / ``schedule``."""
+    from repro.core.format import from_coo
+
+    rows, cols, vals, shape = synthetic_sparse_coo(
+        num_nodes, avg_degree, kind=kind, skew=skew, seed=seed)
+    return from_coo(rows, cols, vals, shape, vector_size=vector_size)

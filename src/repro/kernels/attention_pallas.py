@@ -45,6 +45,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "attention_pallas",
+    "attention_pallas_balanced",
     "attention_pallas_staged",
     "attention_hbm_bytes",
 ]
@@ -215,6 +216,198 @@ def attention_pallas(blocked, q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out if batched else out[0]
 
 
+# ---------------------------------------------------------------------------
+# Block-parallel load-balanced megakernel (DESIGN.md §11).  Grid (H, NS)
+# over uniform schedule segments instead of (H, W) over ragged windows: a
+# hub window's online softmax is split across several cells, each walking
+# at most ``split_blk`` K-blocks.  The running statistics (row max ``m``,
+# row sum ``l``) and the (V, DV) accumulator live in VMEM scratch, which
+# persists across the sequential grid — so carrying them across the split
+# segments of one window is a straight extension of the row-segment
+# rescale the fused kernel already does per block: init on ``seg_first``,
+# the identical per-block update in the identical ascending order
+# (bitwise-equal fp32), normalize + store on ``seg_last``.  Empty windows
+# are zero-length segments whose epilogue stores zeros (l stays 0),
+# matching sparse_softmax ∘ SpMM semantics in-kernel.
+# ---------------------------------------------------------------------------
+
+
+def _balanced_attn_kernel(seg_win_ref, seg_meta_ref, cols_ref, q_ref, k_hbm,
+                          v_hbm, maskf_hbm, o_ref, acc_ref, m_ref, l_ref,
+                          k_buf, v_buf, mask_buf, sems, *, k_blk: int,
+                          k_batched: bool, v_batched: bool):
+    h = pl.program_id(0)
+    s = pl.program_id(1)
+    kh = h if k_batched else 0      # static: shared operands read slice 0
+    vh = h if v_batched else 0
+    lo = seg_meta_ref[s, 0]
+    hi = lo + seg_meta_ref[s, 1]
+    seg_first = seg_meta_ref[s, 2]
+    seg_last = seg_meta_ref[s, 3]
+
+    def block_copies(blk, slot):
+        base = blk * k_blk
+        cps = [pltpu.make_async_copy(
+            maskf_hbm.at[pl.ds(base, k_blk), :],
+            mask_buf.at[slot],
+            sems.at[slot, 0],
+        )]
+        for r in range(k_blk):
+            c = cols_ref[base + r]
+            cps.append(pltpu.make_async_copy(
+                k_hbm.at[kh, pl.ds(c, 1), :],
+                k_buf.at[slot, pl.ds(r, 1)],
+                sems.at[slot, 1],
+            ))
+            cps.append(pltpu.make_async_copy(
+                v_hbm.at[vh, pl.ds(c, 1), :],
+                v_buf.at[slot, pl.ds(r, 1)],
+                sems.at[slot, 2],
+            ))
+        return cps
+
+    @pl.when(seg_first == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qwin = q_ref[0].astype(jnp.float32)                      # (V, D) scaled Q
+
+    @pl.when(lo < hi)
+    def _warmup():
+        for cp in block_copies(lo, 0):
+            cp.start()
+
+    def body(blk, carry):
+        slot = jax.lax.rem(blk - lo, 2)
+
+        @pl.when(blk + 1 < hi)
+        def _prefetch_next():
+            for cp in block_copies(blk + 1, 1 - slot):
+                cp.start()
+
+        for cp in block_copies(blk, slot):
+            cp.wait()
+
+        maskf = mask_buf[slot]                               # (K_BLK, V) f32
+        sc = jax.lax.dot_general(                            # (K_BLK, V)
+            k_buf[slot].astype(jnp.float32), qwin,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        sc = jnp.where(maskf > 0, sc, _NEG)
+        m_new = jnp.maximum(m_ref[...],
+                            jnp.max(sc, axis=0, keepdims=True))  # (1, V)
+        alpha = jnp.exp(m_ref[...] - m_new)                      # (1, V)
+        p = jnp.exp(sc - m_new) * maskf                          # (K_BLK, V)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=0, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha.T + jax.lax.dot_general(
+            p, v_buf[slot].astype(jnp.float32),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                        # (V, DV)
+        m_ref[...] = m_new
+        return carry
+
+    jax.lax.fori_loop(lo, hi, body, 0)
+
+    @pl.when(seg_last == 1)
+    def _epilogue():
+        denom = jnp.maximum(l_ref[...], 1e-20)                   # (1, V)
+        o_ref[...] = (acc_ref[...] / denom.T).astype(o_ref.dtype)[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_windows", "v", "k_blk", "h", "q_batched",
+                     "k_batched", "v_batched", "interpret"),
+)
+def _balanced_attn_call(seg_win, seg_meta, cols, q3, k3, v3, maskf, *,
+                        num_windows, v, k_blk, h, q_batched, k_batched,
+                        v_batched, interpret):
+    d = q3.shape[-1]
+    dv = v3.shape[-1]
+    ns = seg_win.shape[0]
+    grid = (h, ns)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, v, d),
+                lambda hh, s, sw, sm, c: (
+                    (hh if q_batched else 0), sw[s], 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # K stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # V stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # mask (f32) stays in HBM
+        ],
+        out_specs=pl.BlockSpec((1, v, dv),
+                               lambda hh, s, sw, sm, c: (hh, sw[s], 0)),
+        scratch_shapes=[
+            pltpu.VMEM((v, dv), jnp.float32),        # output accumulator
+            pltpu.VMEM((1, v), jnp.float32),         # running row max
+            pltpu.VMEM((1, v), jnp.float32),         # running row sum
+            pltpu.VMEM((2, k_blk, d), k3.dtype),     # K-rows double-buffer
+            pltpu.VMEM((2, k_blk, dv), v3.dtype),    # V-rows double-buffer
+            pltpu.VMEM((2, k_blk, v), jnp.float32),  # mask double-buffer
+            pltpu.SemaphoreType.DMA((2, 3)),
+        ],
+    )
+    kernel = functools.partial(
+        _balanced_attn_kernel, k_blk=k_blk, k_batched=k_batched,
+        v_batched=v_batched)
+    out_shape = jax.ShapeDtypeStruct((h, num_windows * v, dv), v3.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(seg_win, seg_meta, cols, q3, k3, v3, maskf)
+
+
+def attention_pallas_balanced(blocked, q: jax.Array, k: jax.Array,
+                              v: jax.Array, *, schedule=None,
+                              split_blk: int = 1, scale=None,
+                              interpret: bool = True) -> jax.Array:
+    """Load-balanced single-pass fused sparse attention.
+
+    Same contract as :func:`attention_pallas` — per-head or shared
+    Q/K/V, traced ``scale`` folded into Q, one launch for any head count —
+    but the grid runs over the :class:`~repro.core.format.Schedule`'s
+    uniform segments with the online-softmax statistics carried across the
+    split segments of each window.  Outputs are bitwise-equal to
+    :func:`attention_pallas`.
+    """
+    if schedule is None:
+        schedule = blocked.schedule(split_blk)
+    vsz = blocked.vector_size
+    w = blocked.num_windows
+    m, _ = blocked.shape
+    qb, kb, vb = q.ndim == 3, k.ndim == 3, v.ndim == 3
+    batched = qb or kb or vb
+    h = next((x.shape[0] for x, f in ((q, qb), (k, kb), (v, vb)) if f), 1)
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+
+    q3 = qs if qb else qs[None]
+    k3 = k if kb else k[None]
+    v3 = v if vb else v[None]
+    qpad = jnp.zeros((q3.shape[0], w * vsz, q.shape[-1]), q.dtype
+                     ).at[:, : q3.shape[1], :].set(q3)
+    maskf = blocked.mask.astype(jnp.float32)
+
+    out = _balanced_attn_call(
+        schedule.seg_win, schedule.seg_meta, blocked.cols, qpad, k3, v3,
+        maskf, num_windows=w, v=vsz, k_blk=blocked.k_blk, h=h,
+        q_batched=qb, k_batched=kb, v_batched=vb, interpret=interpret,
+    )
+    out = out[:, :m, :]
+    return out if batched else out[0]
+
+
 def attention_pallas_staged(blocked, q: jax.Array, k: jax.Array,
                             v: jax.Array, *, scale=None, n_blk: int = 128,
                             f_blk: int = 128,
@@ -242,7 +435,8 @@ def attention_pallas_staged(blocked, q: jax.Array, k: jax.Array,
 
 
 def attention_hbm_bytes(blocked, d: int, dv: int, *, h: int = 1,
-                        impl: str = "fused", value_bytes: int = 4) -> int:
+                        impl: str = "fused", value_bytes: int = 4,
+                        schedule=None) -> int:
     """Modeled HBM bytes moved by one sparse-attention call under ``impl``.
 
     ``fused``: per head, the Q window tiles are read once, each sampled
@@ -264,12 +458,17 @@ def attention_hbm_bytes(blocked, d: int, dv: int, *, h: int = 1,
     w = blocked.num_windows
     meta = 4 * (w + 1) + 4 * nnzp                 # win_ptr + cols
 
-    if impl == "fused":
+    if impl in ("fused", "balanced"):
         q_bytes = w * v * d * value_bytes         # Q window tiles, once
         kv_pass = nnzp * (d + dv) * value_bytes   # K + V rows, once per block
         mask_bytes = nnzp * v * 4                 # f32 mask per block
         out_bytes = w * v * dv * value_bytes      # output written once
-        return h * (q_bytes + kv_pass + mask_bytes + out_bytes) + meta
+        total = h * (q_bytes + kv_pass + mask_bytes + out_bytes) + meta
+        if impl == "balanced":
+            # identical data movement; add the prefetched segment metadata
+            sched = schedule if schedule is not None else blocked.schedule(1)
+            total += 20 * sched.num_segments      # seg_win (4) + seg_meta (16)
+        return total
     if impl == "staged":
         score_bytes = nnzp * v * 4                # fp32 (NNZP, V) in HBM
         softmax_pass = 2 * score_bytes + nnzp * v  # read + write + bool mask

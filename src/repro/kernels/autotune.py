@@ -29,7 +29,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.format import MEBCRS, block_format
+from repro.core.format import MEBCRS, block_format, window_skew
 
 __all__ = [
     "TuneConfig",
@@ -43,6 +43,11 @@ __all__ = [
 
 DEFAULT_K_BLKS: Tuple[int, ...] = (8, 16, 32)
 DEFAULT_N_BLKS: Tuple[int, ...] = (64, 128, 256)
+# split_blk candidates: 0 = window-parallel kernel, >= 1 = the block-
+# parallel balanced kernel with that segment cap.  The skew bucket in the
+# stats key makes the balanced-vs-plain choice per matrix class (skewed
+# and uniform matrices never share a cached winner).
+DEFAULT_SPLIT_BLKS: Tuple[int, ...] = (0, 1)
 
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 _DEFAULT_CACHE_PATH = os.path.join(
@@ -50,18 +55,28 @@ _DEFAULT_CACHE_PATH = os.path.join(
 
 # On-disk layout version.  v2: the stats key gained dtype + batch-size
 # fields (fp32/bf16 and batched shapes previously collided on one tuned
-# (k_blk, n_blk)) and the file became {"schema": N, "configs": {...}};
-# files with any other/missing schema are discarded wholesale.
-SCHEMA_VERSION = 2
+# (k_blk, n_blk)) and the file became {"schema": N, "configs": {...}}.
+# v3: configs gained ``split_blk`` (the block-parallel schedule's segment
+# cap, 0 = window-parallel) and the stats key a window-skew bucket —
+# winners tuned without the skew dimension must not satisfy skew-aware
+# lookups, so files with any other/missing schema (v1 and v2 alike) are
+# discarded wholesale.
+SCHEMA_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)
 class TuneConfig:
-    """Winner of one sweep: the tiling pair and its measured median ms."""
+    """Winner of one sweep: the tiling triple and its measured median ms.
+
+    ``split_blk = 0`` runs the window-parallel fused kernel; ``>= 1`` runs
+    the block-parallel balanced kernel with that many K-blocks per segment
+    (DESIGN.md §11).
+    """
 
     k_blk: int
     n_blk: int
     median_ms: float
+    split_blk: int = 0
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
@@ -69,7 +84,8 @@ class TuneConfig:
     @classmethod
     def from_json(cls, d: Dict) -> "TuneConfig":
         return cls(k_blk=int(d["k_blk"]), n_blk=int(d["n_blk"]),
-                   median_ms=float(d["median_ms"]))
+                   median_ms=float(d["median_ms"]),
+                   split_blk=int(d.get("split_blk", 0)))
 
 
 def _log2_bucket(x: float) -> int:
@@ -83,7 +99,11 @@ def matrix_stats_key(fmt: MEBCRS, n: int, op: str, *, interpret: bool,
     ``dtype`` (of the dense operand; defaults to the format's value dtype)
     and ``batch`` (product of leading batch/head dims, log2-bucketed) are
     part of the key — fp32 vs bf16 and single vs batched shapes favour
-    different tiles and must not share a cached winner.
+    different tiles and must not share a cached winner.  The window-skew
+    statistic (p99/mean vectors-per-window, log2-bucketed) keys the
+    balanced-vs-plain decision: a hub-heavy matrix and a uniform one with
+    the same size/density land in different buckets, so the block-parallel
+    schedule is chosen per matrix *class* (DESIGN.md §11).
     """
     w = fmt.num_windows
     nnzv = fmt.nnzv
@@ -94,6 +114,7 @@ def matrix_stats_key(fmt: MEBCRS, n: int, op: str, *, interpret: bool,
         f"v{fmt.vector_size}",
         f"w{_log2_bucket(w)}",
         f"vec{_log2_bucket(avg_vec)}",
+        f"sk{_log2_bucket(window_skew(fmt))}",
         f"n{_log2_bucket(n)}",
         f"dt{dt}",
         f"b{_log2_bucket(batch)}",
@@ -171,13 +192,15 @@ def _median_ms(fn, reps: int, warmup: int = 1) -> float:
 
 def _sweep(fmt: MEBCRS, run_cfg, minor: int, key: str, *,
            k_blks: Sequence[int], n_blks: Sequence[int],
-           reps: int, cache: Optional[AutotuneCache]) -> TuneConfig:
+           split_blks: Sequence[int], reps: int,
+           cache: Optional[AutotuneCache]) -> TuneConfig:
     cache = cache if cache is not None else default_cache()
     # The candidate grid is part of the key: a sweep over (8, 16) must not
     # satisfy a later request for (32,) — the winner would be a config the
     # caller explicitly excluded.
     key = (f"{key}|k{','.join(map(str, sorted(k_blks)))}"
-           f"|nb{','.join(map(str, sorted(n_blks)))}")
+           f"|nb{','.join(map(str, sorted(n_blks)))}"
+           f"|s{','.join(map(str, sorted(split_blks)))}")
     hit = cache.get(key)
     if hit is not None:
         return hit
@@ -185,15 +208,18 @@ def _sweep(fmt: MEBCRS, run_cfg, minor: int, key: str, *,
     best: Optional[TuneConfig] = None
     for k_blk in k_blks:
         blocked = block_format(fmt, k_blk)
-        seen = set()
-        for n_blk in n_blks:
-            eff = min(n_blk, max(minor, 1))
-            if eff in seen:
-                continue
-            seen.add(eff)
-            ms = _median_ms(lambda: run_cfg(blocked, eff), reps=reps)
-            if best is None or ms < best.median_ms:
-                best = TuneConfig(k_blk=k_blk, n_blk=eff, median_ms=ms)
+        for split in split_blks:
+            seen = set()
+            for n_blk in n_blks:
+                eff = min(n_blk, max(minor, 1))
+                if eff in seen:
+                    continue
+                seen.add(eff)
+                ms = _median_ms(lambda: run_cfg(blocked, eff, split),
+                                reps=reps)
+                if best is None or ms < best.median_ms:
+                    best = TuneConfig(k_blk=k_blk, n_blk=eff, median_ms=ms,
+                                      split_blk=split)
     assert best is not None
     cache.put(key, best)
     return best
@@ -202,87 +228,119 @@ def _sweep(fmt: MEBCRS, run_cfg, minor: int, key: str, *,
 def tune_spmm(fmt: MEBCRS, b_dense: jax.Array, *,
               k_blks: Sequence[int] = DEFAULT_K_BLKS,
               n_blks: Sequence[int] = DEFAULT_N_BLKS,
+              split_blks: Sequence[int] = DEFAULT_SPLIT_BLKS,
               interpret: bool = True, reps: int = 3,
               cache: Optional[AutotuneCache] = None) -> TuneConfig:
-    """Pick (k_blk, n_blk) for :func:`spmm_pallas` on this matrix class.
+    """Pick (k_blk, n_blk, split_blk) for SpMM on this matrix class.
 
-    ``b_dense`` may carry a leading batch/head dim (H, K, N): the sweep
-    then times the **batched** ``(H, N/N_BLK, W)`` grid on the full batch
-    (one launch per candidate, the path batched callers actually run), and
-    the batch size is part of the cache bucket so batched and unbatched
-    shapes tune independently.
+    ``split_blk`` candidates time the block-parallel balanced kernel
+    (``split_blk >= 1``) against the window-parallel fused kernel
+    (``split_blk = 0``); the window-skew bucket in the cache key makes
+    that choice per matrix class.  ``b_dense`` may carry a leading
+    batch/head dim (H, K, N): the sweep then times the **batched**
+    ``(H, ...)`` grids on the full batch (one launch per candidate, the
+    path batched callers actually run), and the batch size is part of the
+    cache bucket so batched and unbatched shapes tune independently.
     """
-    from .spmm_pallas import spmm_pallas, spmm_pallas_batched
+    from .spmm_pallas import (
+        spmm_pallas,
+        spmm_pallas_balanced,
+        spmm_pallas_batched,
+    )
 
-    batch = 1
-    if b_dense.ndim == 3:
-        batch = b_dense.shape[0]
-        run = lambda blocked, n_blk: spmm_pallas_batched(
-            blocked, b_dense, n_blk=n_blk, interpret=interpret)
-    else:
-        run = lambda blocked, n_blk: spmm_pallas(
-            blocked, b_dense, n_blk=n_blk, interpret=interpret)
+    batch = b_dense.shape[0] if b_dense.ndim == 3 else 1
+
+    def run(blocked, n_blk, split):
+        if split:
+            return spmm_pallas_balanced(blocked, b_dense, split_blk=split,
+                                        n_blk=n_blk, interpret=interpret)
+        if b_dense.ndim == 3:
+            return spmm_pallas_batched(blocked, b_dense, n_blk=n_blk,
+                                       interpret=interpret)
+        return spmm_pallas(blocked, b_dense, n_blk=n_blk,
+                           interpret=interpret)
+
     n = b_dense.shape[-1]
     key = matrix_stats_key(fmt, n, "spmm", interpret=interpret,
                            dtype=b_dense.dtype, batch=batch)
     return _sweep(
-        fmt, run, n, key, k_blks=k_blks, n_blks=n_blks, reps=reps,
-        cache=cache,
+        fmt, run, n, key, k_blks=k_blks, n_blks=n_blks,
+        split_blks=split_blks, reps=reps, cache=cache,
     )
 
 
 def tune_sddmm(fmt: MEBCRS, q: jax.Array, k: jax.Array, *,
                k_blks: Sequence[int] = DEFAULT_K_BLKS,
                f_blks: Sequence[int] = DEFAULT_N_BLKS,
+               split_blks: Sequence[int] = (0,),
                interpret: bool = True, reps: int = 3,
                cache: Optional[AutotuneCache] = None) -> TuneConfig:
     """Pick (k_blk, f_blk) for :func:`sddmm_pallas` on this matrix class.
 
-    Like :func:`tune_spmm`, ``q``/``k`` may carry a leading batch/head
-    dim; the batched ``(H, NB, F/F_BLK)`` grid is then timed on the full
-    batch and the batch size keys the bucket.
+    SDDMM's grid is already block-parallel (one uniform unit of work per
+    K-block, DESIGN.md §11), so the split sweep defaults to the plain
+    kernel only; pass ``split_blks`` explicitly to time the scheduled
+    variant.  Like :func:`tune_spmm`, ``q``/``k`` may carry a leading
+    batch/head dim; the batched ``(H, NB, F/F_BLK)`` grid is then timed
+    on the full batch and the batch size keys the bucket.
     """
-    from .sddmm_pallas import sddmm_pallas, sddmm_pallas_batched
+    from .sddmm_pallas import (
+        sddmm_pallas,
+        sddmm_pallas_balanced,
+        sddmm_pallas_batched,
+    )
 
-    batch = 1
-    if q.ndim == 3 or k.ndim == 3:
-        batch = q.shape[0] if q.ndim == 3 else k.shape[0]
-        run = lambda blocked, f_blk: sddmm_pallas_batched(
-            blocked, q, k, f_blk=f_blk, interpret=interpret)
-    else:
-        run = lambda blocked, f_blk: sddmm_pallas(
-            blocked, q, k, f_blk=f_blk, interpret=interpret)
+    batch = next((x.shape[0] for x in (q, k) if x.ndim == 3), 1)
+
+    def run(blocked, f_blk, split):
+        if split:
+            return sddmm_pallas_balanced(blocked, q, k, split_blk=split,
+                                         f_blk=f_blk, interpret=interpret)
+        if q.ndim == 3 or k.ndim == 3:
+            return sddmm_pallas_batched(blocked, q, k, f_blk=f_blk,
+                                        interpret=interpret)
+        return sddmm_pallas(blocked, q, k, f_blk=f_blk, interpret=interpret)
+
     f = q.shape[-1]
     key = matrix_stats_key(fmt, f, "sddmm", interpret=interpret,
                            dtype=q.dtype, batch=batch)
     return _sweep(
-        fmt, run, f, key, k_blks=k_blks, n_blks=f_blks, reps=reps,
-        cache=cache,
+        fmt, run, f, key, k_blks=k_blks, n_blks=f_blks,
+        split_blks=split_blks, reps=reps, cache=cache,
     )
 
 
 def tune_attention(fmt: MEBCRS, q: jax.Array, k: jax.Array, v: jax.Array, *,
                    k_blks: Sequence[int] = DEFAULT_K_BLKS,
+                   split_blks: Sequence[int] = DEFAULT_SPLIT_BLKS,
                    interpret: bool = True, reps: int = 3,
                    cache: Optional[AutotuneCache] = None) -> TuneConfig:
-    """Pick ``k_blk`` for the fused sparse-attention megakernel.
+    """Pick ``(k_blk, split_blk)`` for the fused sparse-attention kernel.
 
-    The ``(H, W)`` grid keeps whole K/V rows resident per K-block, so the
-    only free tile parameter is the block depth; the returned
+    The megakernel grids keep whole K/V rows resident per K-block, so the
+    free parameters are the block depth and the schedule's segment cap
+    (``split_blk = 0`` times the window-parallel ``(H, W)`` grid,
+    ``>= 1`` the balanced ``(H, NS)`` grid); the returned
     ``TuneConfig.n_blk`` records the (fixed) value head dim for the cache
     record.  ``q``/``k``/``v`` may carry a leading head dim — the sweep
     times the single batched launch, and H keys the bucket.
     """
-    from .attention_pallas import attention_pallas
+    from .attention_pallas import attention_pallas, attention_pallas_balanced
 
     batch = next((x.shape[0] for x in (q, k, v) if x.ndim == 3), 1)
     d = q.shape[-1]
     dv = v.shape[-1]
     key = matrix_stats_key(fmt, d, "attn", interpret=interpret,
                            dtype=q.dtype, batch=batch)
+
+    def run(blocked, _dv, split):
+        if split:
+            return attention_pallas_balanced(blocked, q, k, v,
+                                             split_blk=split,
+                                             interpret=interpret)
+        return attention_pallas(blocked, q, k, v, interpret=interpret)
+
     return _sweep(
-        fmt,
-        lambda blocked, _dv: attention_pallas(blocked, q, k, v,
-                                              interpret=interpret),
-        dv, key, k_blks=k_blks, n_blks=(dv,), reps=reps, cache=cache,
+        fmt, run, dv, key, k_blks=k_blks, n_blks=(dv,),
+        split_blks=split_blks, reps=reps, cache=cache,
     )

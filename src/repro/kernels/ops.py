@@ -22,12 +22,19 @@ from repro.core import dispatch as _dispatch
 from .attention_pallas import (
     attention_hbm_bytes,
     attention_pallas,
+    attention_pallas_balanced,
     attention_pallas_staged,
 )
-from .sddmm_pallas import sddmm_hbm_bytes, sddmm_pallas, sddmm_pallas_batched
+from .sddmm_pallas import (
+    sddmm_hbm_bytes,
+    sddmm_pallas,
+    sddmm_pallas_balanced,
+    sddmm_pallas_batched,
+)
 from .spmm_pallas import (
     spmm_hbm_bytes,
     spmm_pallas,
+    spmm_pallas_balanced,
     spmm_pallas_batched,
     spmm_pallas_noncoalesced,
     spmm_pallas_staged,
@@ -36,9 +43,12 @@ from .spmm_pallas import (
 __all__ = [
     "spmm",
     "sddmm",
+    "spmm_balanced",
+    "sddmm_balanced",
     "spmm_batched",
     "sddmm_batched",
     "attention",
+    "attention_balanced",
     "attention_staged",
     "spmm_noncoalesced",
     "spmm_staged",
@@ -100,6 +110,31 @@ def sddmm_batched(blocked, q, k, *, f_blk: int = 128,
                                 interpret=_resolve_interpret(interpret))
 
 
+def spmm_balanced(blocked, b_dense, *, schedule=None, split_blk: int = 1,
+                  n_blk: int = 128, interpret: bool | None = None):
+    """Block-parallel load-balanced SpMM (uniform-segment grid, §11)."""
+    return spmm_pallas_balanced(blocked, b_dense, schedule=schedule,
+                                split_blk=split_blk, n_blk=n_blk,
+                                interpret=_resolve_interpret(interpret))
+
+
+def sddmm_balanced(blocked, q, k, *, schedule=None, split_blk: int = 1,
+                   f_blk: int = 128, interpret: bool | None = None):
+    """Schedule-driven SDDMM (block-indirect grid, zeros for empty)."""
+    return sddmm_pallas_balanced(blocked, q, k, schedule=schedule,
+                                 split_blk=split_blk, f_blk=f_blk,
+                                 interpret=_resolve_interpret(interpret))
+
+
+def attention_balanced(blocked, q, k, v, *, schedule=None,
+                       split_blk: int = 1, scale=None,
+                       interpret: bool | None = None):
+    """Load-balanced fused sparse attention (segment-aware online softmax)."""
+    return attention_pallas_balanced(blocked, q, k, v, schedule=schedule,
+                                     split_blk=split_blk, scale=scale,
+                                     interpret=_resolve_interpret(interpret))
+
+
 def attention(blocked, q, k, v, *, scale=None, interpret: bool | None = None):
     """Single-pass fused sparse attention (SDDMM→softmax→SpMM megakernel)."""
     return attention_pallas(blocked, q, k, v, scale=scale,
@@ -116,7 +151,8 @@ def attention_staged(blocked, q, k, v, *, scale=None, n_blk: int = 128,
 
 def attention_tuned(fmt, q, k, v, *, scale=None, interpret: bool | None = None,
                     cache=None, k_blks=None):
-    """Autotuned fused attention: sweep/cache k_blk, then run the megakernel.
+    """Autotuned fused attention: sweep/cache ``(k_blk, split_blk)``, then
+    run the winning megakernel (window-parallel or block-parallel).
 
     ``fmt`` must be the canonical :class:`~repro.core.format.MEBCRS` (the
     tuner re-blocks it per candidate ``k_blk``).
@@ -130,6 +166,10 @@ def attention_tuned(fmt, q, k, v, *, scale=None, interpret: bool | None = None,
     cfg = autotune.tune_attention(fmt, q, k, v, interpret=interpret,
                                   cache=cache, **kwargs)
     blocked = block_format(fmt, cfg.k_blk)
+    if cfg.split_blk:
+        return attention_pallas_balanced(blocked, q, k, v, scale=scale,
+                                         split_blk=cfg.split_blk,
+                                         interpret=interpret)
     return attention_pallas(blocked, q, k, v, scale=scale,
                             interpret=interpret)
 
@@ -158,7 +198,10 @@ def spmm_tuned_plan(fmt, b_dense, *, interpret: bool | None = None,
 
 def spmm_tuned(fmt, b_dense, *, interpret: bool | None = None, cache=None,
                k_blks=None, n_blks=None):
-    """Autotuned SpMM: sweep/cache (k_blk, n_blk), then run the fused kernel.
+    """Autotuned SpMM: sweep/cache ``(k_blk, n_blk, split_blk)``, then run
+    the winner — the window-parallel fused kernel, or the block-parallel
+    balanced kernel when the sweep preferred a split (skewed matrices;
+    the skew bucket keys the cache).
 
     ``fmt`` must be the canonical :class:`~repro.core.format.MEBCRS` (the
     tuner re-blocks it per candidate ``k_blk``).  A batched ``(H, K, N)``
@@ -166,6 +209,10 @@ def spmm_tuned(fmt, b_dense, *, interpret: bool | None = None, cache=None,
     """
     cfg, blocked = spmm_tuned_plan(fmt, b_dense, interpret=interpret,
                                    cache=cache, k_blks=k_blks, n_blks=n_blks)
+    if cfg.split_blk:
+        return spmm_pallas_balanced(blocked, b_dense,
+                                    split_blk=cfg.split_blk, n_blk=cfg.n_blk,
+                                    interpret=_resolve_interpret(interpret))
     run = spmm_pallas_batched if b_dense.ndim == 3 else spmm_pallas
     return run(blocked, b_dense, n_blk=cfg.n_blk,
                interpret=_resolve_interpret(interpret))
@@ -261,6 +308,27 @@ def _spmm_batched_adapter(fmt, b, *, k_blk=8, n_blk=128, interpret=None):
                         interpret=interpret)
 
 
+def _spmm_balanced_adapter(fmt, b, *, k_blk=8, n_blk=128, split_blk=1,
+                           schedule=None, interpret=None):
+    return spmm_balanced(_ensure_blocked(fmt, k_blk), b, schedule=schedule,
+                         split_blk=split_blk, n_blk=n_blk,
+                         interpret=interpret)
+
+
+def _sddmm_balanced_adapter(fmt, q, k, *, k_blk=8, f_blk=128, split_blk=1,
+                            schedule=None, interpret=None):
+    return sddmm_balanced(_ensure_blocked(fmt, k_blk), q, k,
+                          schedule=schedule, split_blk=split_blk,
+                          f_blk=f_blk, interpret=interpret)
+
+
+def _attention_balanced_adapter(fmt, q, k, v, *, scale=None, k_blk=8,
+                                split_blk=1, schedule=None, interpret=None):
+    return attention_balanced(_ensure_blocked(fmt, k_blk), q, k, v,
+                              schedule=schedule, split_blk=split_blk,
+                              scale=scale, interpret=interpret)
+
+
 def _sddmm_batched_adapter(fmt, q, k, *, k_blk=8, f_blk=128, interpret=None):
     return sddmm_batched(_ensure_blocked(fmt, k_blk), q, k, f_blk=f_blk,
                          interpret=interpret)
@@ -289,6 +357,17 @@ def _attention_tuned_adapter(fmt, q, k, v, *, scale=None, k_blk=8,
 _dispatch.register("spmm", "pallas", _spmm_pallas_adapter, differentiable=True)
 _dispatch.register("spmm", "pallas_batched", _spmm_batched_adapter,
                    differentiable=True, batched=True)
+# Block-parallel load-balanced impls (DESIGN.md §11): uniform-segment grids
+# driven by a host-built Schedule; bitwise-equal to the window-parallel
+# kernels, chosen for skewed matrices (autotuner sweeps split_blk per
+# skew bucket).  The natively-batched grids serve all head counts.
+_dispatch.register("spmm", "pallas_balanced", _spmm_balanced_adapter,
+                   differentiable=True, batched=True, load_balanced=True)
+_dispatch.register("sddmm", "pallas_balanced", _sddmm_balanced_adapter,
+                   differentiable=True, batched=True, load_balanced=True)
+_dispatch.register("attention", "pallas_balanced",
+                   _attention_balanced_adapter, differentiable=True,
+                   batched=True, load_balanced=True)
 _dispatch.register("spmm", "pallas_tuned", _spmm_tuned_adapter,
                    differentiable=True, needs_canonical=True)
 _dispatch.register("spmm", "pallas_staged", _spmm_staged_adapter)

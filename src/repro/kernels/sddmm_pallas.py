@@ -27,7 +27,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["sddmm_pallas", "sddmm_pallas_batched", "sddmm_hbm_bytes"]
+__all__ = [
+    "sddmm_pallas",
+    "sddmm_pallas_balanced",
+    "sddmm_pallas_batched",
+    "sddmm_hbm_bytes",
+]
 
 
 def _fused_sddmm_kernel(block_win_ref, cols_ref, q_ref, k_hbm, mask_ref,
@@ -271,6 +276,157 @@ def sddmm_pallas_batched(blocked, q: jax.Array, k: jax.Array, *,
         v=v, k_blk=blocked.k_blk, f_blk=f_blk, h=h,
         q_batched=qb, k_batched=kb, interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Block-parallel scheduled variant (DESIGN.md §11).  SDDMM's natural grid is
+# *already* block-parallel — every K-block is one uniform unit of work
+# (K_BLK sampled rows × the feature tiles), so there is no ragged inner
+# loop to split.  What the schedule adds is the block indirection: the grid
+# runs over the Schedule's ``blk_id`` list — scheduled blocks only, in
+# schedule order — so the degenerate all-empty matrix (zero scheduled
+# blocks) returns zeros without launching or relying on the dummy block,
+# and any future block reordering the scheduler emits is honored.  Grid
+# ``(H, NSB, F/F_BLK)``; per-cell arithmetic identical to the batched
+# kernel, hence bitwise-equal outputs.
+# ---------------------------------------------------------------------------
+
+
+def _balanced_sddmm_kernel(blk_id_ref, blk_win_ref, cols_ref, q_ref, k_hbm,
+                           mask_ref, o_ref, acc_ref, k_buf, sems, *,
+                           k_blk: int, f_blk: int, nf: int, k_batched: bool):
+    h = pl.program_id(0)
+    s = pl.program_id(1)
+    fi = pl.program_id(2)
+    kh = h if k_batched else 0      # static: shared K reads slice 0
+    base = blk_id_ref[s] * k_blk
+
+    def row_copies(tile_fi, slot):
+        return [
+            pltpu.make_async_copy(
+                k_hbm.at[kh, pl.ds(cols_ref[base + r], 1),
+                         pl.ds(tile_fi * f_blk, f_blk)],
+                k_buf.at[slot, pl.ds(r, 1)],
+                sems.at[slot],
+            )
+            for r in range(k_blk)
+        ]
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        for cp in row_copies(0, 0):
+            cp.start()
+
+    slot = jax.lax.rem(fi, 2)
+
+    @pl.when(fi + 1 < nf)
+    def _prefetch_next():
+        for cp in row_copies(fi + 1, 1 - slot):
+            cp.start()
+
+    for cp in row_copies(fi, slot):
+        cp.wait()
+
+    acc_ref[...] += jax.lax.dot_general(
+        k_buf[slot].astype(jnp.float32),
+        q_ref[0].astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(fi == nf - 1)
+    def _epilogue():
+        o_ref[...] = (acc_ref[...] * mask_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("v", "k_blk", "f_blk", "h", "q_batched", "k_batched",
+                     "nb", "interpret"),
+)
+def _balanced_sddmm_call(blk_id, blk_win, cols, q3, k3, mask, *, v, k_blk,
+                         f_blk, h, q_batched, k_batched, nb, interpret):
+    nsb = blk_id.shape[0]
+    f_pad = q3.shape[-1]
+    nf = f_pad // f_blk
+    grid = (h, nsb, nf)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, v, f_blk),
+                lambda hh, s, fi, bid, bw, c: (
+                    (hh if q_batched else 0), bw[s], fi)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # K stays in HBM
+            pl.BlockSpec((k_blk, v),
+                         lambda hh, s, fi, bid, bw, c: (bid[s], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k_blk, v),
+                               lambda hh, s, fi, bid, bw, c: (hh, bid[s], 0)),
+        scratch_shapes=[
+            pltpu.VMEM((k_blk, v), jnp.float32),           # fp32 accumulator
+            pltpu.VMEM((2, k_blk, f_blk), k3.dtype),       # K-rows buffer
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out_shape = jax.ShapeDtypeStruct((h, nb * k_blk, v), q3.dtype)
+    kernel = functools.partial(
+        _balanced_sddmm_kernel, k_blk=k_blk, f_blk=f_blk, nf=nf,
+        k_batched=k_batched)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(blk_id, blk_win, cols, q3, k3, mask)
+
+
+def sddmm_pallas_balanced(blocked, q: jax.Array, k: jax.Array, *,
+                          schedule=None, split_blk: int = 1,
+                          f_blk: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """Schedule-driven SDDMM over a :class:`BlockedMEBCRS` pattern.
+
+    ``schedule`` is the precomputed :class:`~repro.core.format.Schedule`
+    (built from ``blocked`` with ``split_blk`` when omitted — host-side).
+    Runs the grid over the schedule's block list: an all-empty matrix has
+    zero scheduled blocks and returns zeros without a kernel launch.
+    Batching follows :func:`sddmm_pallas_batched` (unbatched in →
+    unbatched out); outputs are bitwise-equal to the window-parallel
+    kernels.
+    """
+    if schedule is None:
+        schedule = blocked.schedule(split_blk)
+    qb, kb = q.ndim == 3, k.ndim == 3
+    h = q.shape[0] if qb else (k.shape[0] if kb else 1)
+    v = blocked.vector_size
+    w = blocked.num_windows
+    nb = blocked.num_blocks
+    if schedule.num_blocks == 0:
+        shape = (h, nb * blocked.k_blk, v)
+        out = jnp.zeros(shape, q.dtype)
+        return out if (qb or kb) else out[0]
+    f = q.shape[-1]
+    f_blk = min(f_blk, max(f, 1))
+    f_pad = -(-f // f_blk) * f_blk
+
+    q3 = q if qb else q[None]
+    k3 = k if kb else k[None]
+    qpad = jnp.zeros((q3.shape[0], w * v, f_pad), q.dtype
+                     ).at[:, : q3.shape[1], :f].set(q3)
+    if f_pad != f:
+        k3 = jnp.pad(k3, ((0, 0), (0, 0), (0, f_pad - f)))
+
+    out = _balanced_sddmm_call(
+        schedule.blk_id, schedule.blk_win, blocked.cols, qpad, k3,
+        blocked.mask, v=v, k_blk=blocked.k_blk, f_blk=f_blk, h=h,
+        q_batched=qb, k_batched=kb, nb=nb, interpret=interpret,
+    )
+    return out if (qb or kb) else out[0]
 
 
 def sddmm_hbm_bytes(blocked, f: int, *, f_blk: int = 128,

@@ -29,6 +29,11 @@ This is the TPU realization of FlashSparse's swap-and-transpose SpMM
 
 Grid: ``(N / N_BLK, W)`` with the window index innermost.  The accumulator
 block is (V=8, N_BLK=128) fp32 — exactly one VREG tile.
+
+:func:`spmm_pallas_balanced` (DESIGN.md §11) replaces the ragged
+per-window inner loop with a **block-parallel** grid over uniform
+schedule segments — same DMAs, same ascending-block fp32 accumulation
+(bitwise-equal), but hub windows no longer serialize one grid cell.
 """
 
 from __future__ import annotations
@@ -42,6 +47,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "spmm_pallas",
+    "spmm_pallas_balanced",
     "spmm_pallas_batched",
     "spmm_pallas_noncoalesced",
     "spmm_pallas_staged",
@@ -352,6 +358,169 @@ def spmm_pallas_batched(blocked, b_dense: jax.Array, *, n_blk: int = 128,
 
 
 # ---------------------------------------------------------------------------
+# Block-parallel load-balanced kernel (DESIGN.md §11).  The grid runs over
+# uniform schedule segments — grid (H, N/N_BLK, NS) with the segment index
+# innermost — instead of ragged per-window loops: every cell contracts at
+# most ``split_blk`` K-blocks, so a hub window's work is spread over many
+# cells instead of serializing one.  Segments of one window are contiguous
+# in grid order (Schedule invariant), so consecutive cells revisit the same
+# resident output block: the fp32 accumulator scratch persists across the
+# sequential grid, is zeroed on ``seg_first``, accumulates blocks in the
+# same ascending order as the window-parallel kernel (bitwise-equal fp32),
+# and the epilogue casts + stores on ``seg_last``.  Empty windows are
+# zero-length segments — no DMA, no MXU work, just the predicated zero
+# store — so the all-empty matrix needs no dummy block and no post-pass.
+# Operands follow the batched convention: one (H, ...) launch for any head
+# count, shared operands passed as a (1, ...) slice.
+# ---------------------------------------------------------------------------
+
+
+def _balanced_spmm_kernel(seg_win_ref, seg_meta_ref, cols_ref, vals_hbm,
+                          b_hbm, o_ref, acc_ref, vals_buf, b_buf, sems, *,
+                          k_blk: int, n_blk: int, vals_batched: bool,
+                          b_batched: bool):
+    h = pl.program_id(0)
+    j = pl.program_id(1)
+    s = pl.program_id(2)
+    vh = h if vals_batched else 0   # static: shared operands read slice 0
+    bh = h if b_batched else 0
+    lo = seg_meta_ref[s, 0]
+    hi = lo + seg_meta_ref[s, 1]
+    seg_first = seg_meta_ref[s, 2]
+    seg_last = seg_meta_ref[s, 3]
+
+    def block_copies(blk, slot):
+        base = blk * k_blk
+        vals_cp = pltpu.make_async_copy(
+            vals_hbm.at[vh, pl.ds(base, k_blk), :],
+            vals_buf.at[slot],
+            sems.at[slot, 0],
+        )
+        row_cps = [
+            pltpu.make_async_copy(
+                b_hbm.at[bh, pl.ds(cols_ref[base + r], 1),
+                         pl.ds(j * n_blk, n_blk)],
+                b_buf.at[slot, pl.ds(r, 1)],
+                sems.at[slot, 1],
+            )
+            for r in range(k_blk)
+        ]
+        return [vals_cp] + row_cps
+
+    @pl.when(seg_first == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(lo < hi)
+    def _warmup():
+        for cp in block_copies(lo, 0):
+            cp.start()
+
+    def body(blk, carry):
+        slot = jax.lax.rem(blk - lo, 2)
+
+        @pl.when(blk + 1 < hi)
+        def _prefetch_next():
+            for cp in block_copies(blk + 1, 1 - slot):
+                cp.start()
+
+        for cp in block_copies(blk, slot):
+            cp.wait()
+        acc_ref[...] += jax.lax.dot_general(
+            vals_buf[slot].astype(jnp.float32),
+            b_buf[slot].astype(jnp.float32),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return carry
+
+    jax.lax.fori_loop(lo, hi, body, 0)
+
+    @pl.when(seg_last == 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_windows", "v", "k_blk", "n_blk", "h",
+                     "vals_batched", "b_batched", "interpret"),
+)
+def _balanced_spmm_call(seg_win, seg_meta, cols, vals3, b3, *, num_windows,
+                        v, k_blk, n_blk, h, vals_batched, b_batched,
+                        interpret):
+    n_pad = b3.shape[-1]
+    ns = seg_win.shape[0]
+    grid = (h, n_pad // n_blk, ns)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),  # vals stay in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # B stays in HBM
+        ],
+        out_specs=pl.BlockSpec((1, v, n_blk),
+                               lambda hh, j, s, sw, sm, c: (hh, sw[s], j)),
+        scratch_shapes=[
+            pltpu.VMEM((v, n_blk), jnp.float32),           # fp32 accumulator
+            pltpu.VMEM((2, k_blk, v), vals3.dtype),        # vals double-buffer
+            pltpu.VMEM((2, k_blk, n_blk), b3.dtype),       # B-rows buffer
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
+    )
+    kernel = functools.partial(
+        _balanced_spmm_kernel, k_blk=k_blk, n_blk=n_blk,
+        vals_batched=vals_batched, b_batched=b_batched,
+    )
+    out_shape = jax.ShapeDtypeStruct((h, num_windows * v, n_pad), b3.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(seg_win, seg_meta, cols, vals3, b3)
+
+
+def spmm_pallas_balanced(blocked, b_dense: jax.Array, *, schedule=None,
+                         split_blk: int = 1, n_blk: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """Block-parallel load-balanced SpMM over a :class:`BlockedMEBCRS`.
+
+    ``schedule`` is the precomputed :class:`~repro.core.format.Schedule`;
+    omitted, it is built (and memoized) from ``blocked`` with ``split_blk``
+    — host-side, so pass it explicitly when calling under ``jit``
+    (``ADPlan`` does).  Operand batching follows
+    :func:`spmm_pallas_batched`: ``blocked.vals`` may be ``(NNZP, V)`` or
+    ``(H, NNZP, V)``, ``b_dense`` ``(K, N)`` or ``(H, K, N)``; unbatched
+    in → unbatched out.  Results are **bitwise-equal** to
+    :func:`spmm_pallas` (same per-block contraction in the same ascending
+    order); only the work-to-grid mapping differs.
+    """
+    if schedule is None:
+        schedule = blocked.schedule(split_blk)
+    vals = blocked.vals
+    vb, bb = vals.ndim == 3, b_dense.ndim == 3
+    h = vals.shape[0] if vb else (b_dense.shape[0] if bb else 1)
+    m, _ = blocked.shape
+    n = b_dense.shape[-1]
+    n_blk = min(n_blk, max(n, 1))
+    n_pad = -(-n // n_blk) * n_blk
+    b3 = b_dense if bb else b_dense[None]
+    if n_pad != n:
+        b3 = jnp.pad(b3, ((0, 0), (0, 0), (0, n_pad - n)))
+    vals3 = vals if vb else vals[None]
+    out = _balanced_spmm_call(
+        schedule.seg_win, schedule.seg_meta, blocked.cols, vals3, b3,
+        num_windows=blocked.num_windows, v=blocked.vector_size,
+        k_blk=blocked.k_blk, n_blk=n_blk, h=h,
+        vals_batched=vb, b_batched=bb, interpret=interpret,
+    )
+    out = out[:, :m, :n]
+    return out if (vb or bb) else out[0]
+
+
+# ---------------------------------------------------------------------------
 # Staged-gather baseline (the pre-fusion pipeline, kept for the traffic
 # model and ablation benchmarks): bgath = B[cols] materialized in HBM, then
 # re-read through BlockSpecs; unvisited windows zeroed in a post-pass.
@@ -440,12 +609,21 @@ def spmm_pallas_staged(blocked, b_dense: jax.Array, *, n_blk: int = 128,
 
 
 def spmm_hbm_bytes(blocked, n: int, *, n_blk: int = 128,
-                   impl: str = "fused", value_bytes: int = 4) -> int:
+                   impl: str = "fused", value_bytes: int = 4,
+                   schedule=None) -> int:
     """Modeled HBM bytes moved by one SpMM under ``impl``.
 
     ``fused`` / ``noncoalesced``: each needed dense row is DMA'd from B
     exactly once per output column tile; vals tiles are re-read per column
     tile; the output is written once in its final dtype.
+
+    ``balanced``: identical data movement to ``fused`` (same DMAs, same
+    single output store per window — the schedule only re-maps work to
+    grid cells) plus the scalar-prefetched segment metadata (``seg_win`` +
+    ``seg_meta``, 20 bytes per segment).  Pass the ``schedule`` (defaults
+    to ``blocked.schedule(1)``).  The *latency* difference the schedule
+    exists for is modeled separately — see
+    :func:`benchmarks.common.balance_cost`.
 
     ``staged``: additionally reads B and writes the ``(NB·K_BLK, N)``
     gather buffer, then re-reads it inside the kernel — three full passes
@@ -465,6 +643,10 @@ def spmm_hbm_bytes(blocked, n: int, *, n_blk: int = 128,
 
     if impl in ("fused", "noncoalesced"):
         return dense_pass + vals_bytes + meta_bytes + out_bytes
+    if impl == "balanced":
+        sched = schedule if schedule is not None else blocked.schedule(1)
+        sched_bytes = 20 * sched.num_segments   # seg_win (4) + seg_meta (16)
+        return dense_pass + vals_bytes + meta_bytes + out_bytes + sched_bytes
     if impl == "staged":
         # gather read + gather write + kernel re-read of bgath, plus the
         # fp32 intermediate re-read/rewritten by the zero/cast post-pass.

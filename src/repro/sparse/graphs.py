@@ -23,6 +23,7 @@ import numpy as np
 
 __all__ = [
     "power_law_graph",
+    "hub_row_graph",
     "erdos_renyi_graph",
     "gcn_normalized",
     "GraphData",
@@ -44,6 +45,30 @@ def power_law_graph(num_nodes: int, avg_degree: float, seed: int = 0,
     # permute target ids so hubs are scattered, as in real graphs
     perm = rng.permutation(num_nodes)
     cols = perm[cols]
+    edges = np.unique(np.stack([rows, cols], axis=1), axis=0)
+    return edges[:, 0], edges[:, 1]
+
+
+def hub_row_graph(num_nodes: int, avg_degree: float, seed: int = 0,
+                  skew: float = 1.5) -> Tuple[np.ndarray, np.ndarray]:
+    """Directed graph with Zipf-distributed **out**-degrees (hub rows).
+
+    :func:`power_law_graph` skews the *column* density (hub targets);
+    this generator skews the *row* lengths instead — the distribution
+    that unbalances ME-BCRS row windows: a few windows own most K-blocks
+    while the tail is near-empty (p99/mean window skew grows with
+    ``skew``).  This is the workload the block-parallel schedule
+    (DESIGN.md §11) exists for; ``skew`` is the Zipf exponent (≥ ~1.5
+    gives the hub-dominated regime the benchmarks regress against).
+    Hub rows stay at low indices so they concentrate in few windows,
+    like the degree-sorted graphs GNN pipelines feed.
+    """
+    rng = np.random.default_rng(seed)
+    num_edges = int(num_nodes * avg_degree)
+    weights = 1.0 / np.arange(1, num_nodes + 1) ** skew
+    weights /= weights.sum()
+    rows = rng.choice(num_nodes, size=num_edges, p=weights)
+    cols = rng.integers(0, num_nodes, size=num_edges)
     edges = np.unique(np.stack([rows, cols], axis=1), axis=0)
     return edges[:, 0], edges[:, 1]
 

@@ -133,7 +133,9 @@ def test_pallas_tuned_plan_trains_and_logs_fused(tmp_path):
         gv, gb = jax.grad(
             lambda v, bb: spmm_ad(plan, v, bb, interpret=True).sum(),
             argnums=(0, 1))(plan.vals, b)
-    assert all(impl == "pallas" for op, impl in log), log
+    # the sweep picks window-parallel or balanced per direction (timing);
+    # either way every dispatch must be a fused Pallas kernel
+    assert all(impl in ("pallas", "pallas_balanced") for op, impl in log), log
     np.testing.assert_allclose(
         np.asarray(gb), a.T @ np.ones((32, 8), np.float32),
         rtol=1e-5, atol=1e-5)
