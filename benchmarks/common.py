@@ -128,11 +128,15 @@ def balance_cost(blocked, n: int, *, impl: str = "window", schedule=None,
         counts = np.diff(np.asarray(blocked.win_ptr)).astype(np.int64)
         cells = fixed_cell_bytes + counts * block_bytes + store_bytes
     elif impl == "balanced":
+        # single source of the balanced cell vector — the same function
+        # the §12 device partitioner balances (sparse_shard.segment_costs)
+        from repro.distributed.sparse_shard import segment_costs
+
         if schedule is None:
             schedule = blocked.schedule(1)
-        meta = np.asarray(schedule.seg_meta)
-        cells = (fixed_cell_bytes + meta[:, 1].astype(np.int64) * block_bytes
-                 + meta[:, 3] * store_bytes)
+        cells = segment_costs(blocked, schedule, n_blk=n_blk,
+                              value_bytes=value_bytes,
+                              fixed_cell_bytes=fixed_cell_bytes)
     else:
         raise ValueError(f"unknown impl {impl!r}")
     if cells.size == 0:

@@ -46,9 +46,34 @@ GRAD_OPS = {
 }
 OP_MODES = sorted(GRAD_OPS) + ["attn", "spmm"]
 
+_EPILOG = """\
+op benchmark modes (--op NAME, not part of the default figure suite):
+  grad_spmm    SpMM forward+backward timing per impl through the autodiff
+               duality (DESIGN.md §9), incl. batched (H, ...) grids vs the
+               per-slice loop; emits BENCH_grad.json
+  grad_sddmm   same fwd+bwd trajectory for SDDMM; emits BENCH_grad.json
+  attn         single-pass fused sparse-attention megakernel vs the staged
+               3-dispatch pipeline (DESIGN.md §10); emits BENCH_attn.json
+  spmm         SpMM kernel-path records (fused/staged/noncoalesced/tuned);
+               emits BENCH_spmm.json
+
+modifier flags:
+  --skewed     with --op spmm: add the hub-row skewed suite — the
+               balanced-vs-window scheduling comparison (DESIGN.md §11,
+               >= 1.3x cost floor in CI) and the per-device partition
+               balance records (DESIGN.md §12, max/mean <= 1.25 floor at
+               8 devices)
+
+examples:
+  python -m benchmarks.run --op attn --scale 0.002
+  python -m benchmarks.run --op spmm --skewed --scale 0.002
+"""
+
 
 def main(argv=None) -> int:
-    p = argparse.ArgumentParser(description=__doc__)
+    p = argparse.ArgumentParser(
+        description=__doc__, epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     p.add_argument("--only", default=None,
                    help="comma-separated subset of: " + ",".join(BENCHES))
     p.add_argument("--op", default=None, choices=OP_MODES,

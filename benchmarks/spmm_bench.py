@@ -168,6 +168,71 @@ def skewed_records(scale: float = 0.002, n_values=(128,),
     return recs
 
 
+def device_balance_records(scale: float = 0.002, num_devices=(2, 4, 8),
+                           split_blk: int = 1, verbose: bool = True):
+    """Inter-device partition-balance records on the skewed suite
+    (DESIGN.md §12).
+
+    For each hub-row matrix and device count, partitions the block-
+    parallel schedule with :func:`repro.distributed.sparse_shard
+    .device_balance` — the same cost model and cut selection the sharded
+    ops run — in **both** partition modes: ``window_split=True`` (hub
+    windows may straddle a cut; the SpMM/SDDMM execution path, incl.
+    ``ad_plan``'s ``fwd_part``/``bwd_part``) and ``window_split=False``
+    (window-aligned, the fused-attention path, where a hub window larger
+    than a device's fair share structurally pins the balance — recorded
+    so the gap stays visible).  The CI floor asserts ``max/mean <= 1.25``
+    at 8 devices on every skew >= 1.5 matrix for the straddling
+    partitioner.  Host-side only: no multi-device runtime is needed to
+    audit partition quality.
+    """
+    from repro.distributed.sparse_shard import device_balance
+
+    recs = []
+    for g, skew in skewed_suite(scale):
+        shape = (g.num_nodes, g.num_nodes)
+        fmt = from_coo(g.rows, g.cols, g.vals, shape, vector_size=8)
+        blocked = block_format(fmt, k_blk=8)
+        wskew = window_skew(fmt)
+        for ndev in num_devices:
+            for window_split in (True, False):
+                bal = device_balance(blocked, ndev, split_blk=split_blk,
+                                     window_split=window_split)
+                recs.append({
+                    "op": "spmm", "impl": "pallas_sharded",
+                    "matrix": g.name, "shape": [shape[0], shape[1], 128],
+                    "skew_exponent": skew, "window_skew": round(wskew, 2),
+                    "vector_size": 8, "k_blk": 8, "split_blk": split_blk,
+                    "num_devices": ndev, "window_split": window_split,
+                    "device_costs": bal["costs"],
+                    "device_balance_max_over_mean": bal["max_over_mean"],
+                })
+                if verbose:
+                    tag = "straddle" if window_split else "aligned "
+                    print(f"  {g.name:16s} D={ndev} {tag} device balance "
+                          f"max/mean {bal['max_over_mean']:.3f}")
+    return recs
+
+
+def _device_balance_summary(recs) -> dict:
+    """Worst-case partition skew at 8 devices over the sharded records.
+
+    The floored statistic is the straddling partitioner (the SpMM/SDDMM
+    execution path); the window-aligned figure is informational — it is
+    structurally pinned by the largest hub window."""
+    def worst(window_split):
+        vals = [r["device_balance_max_over_mean"] for r in recs
+                if r.get("num_devices") == 8
+                and r.get("window_split") is window_split]
+        return max(vals) if vals else 1.0
+
+    return {
+        "device_balance_max_over_mean_8dev": worst(True),
+        "device_balance_max_over_mean_8dev_window_aligned": worst(False),
+        "num_device_balance_records": len(recs),
+    }
+
+
 def _skew_summary(recs) -> dict:
     """Balanced-vs-window cost reduction over the skewed records."""
     bal = {(r["matrix"], tuple(r["shape"])): r["balance_cost"]
@@ -196,8 +261,10 @@ def run_op(scale: float = 0.002, skewed: bool = False, verbose: bool = True,
     extra = {}
     if skewed:
         skew_recs = skewed_records(scale=scale, verbose=verbose)
-        recs = recs + skew_recs
-        extra = _skew_summary(skew_recs)
+        dev_recs = device_balance_records(scale=scale, verbose=verbose)
+        recs = recs + skew_recs + dev_recs
+        extra = {**_skew_summary(skew_recs),
+                 **_device_balance_summary(dev_recs)}
     result = {}
     attach_bench_json(result, recs, bench_json, op="spmm",
                       fused_impl="pallas_fused",

@@ -12,6 +12,10 @@ transpose-SpMM/SDDMM duality (DESIGN.md §9) through the same kernels.
   PYTHONPATH=src python examples/gnn_train.py [--graph GitHub] [--epochs 60]
   PYTHONPATH=src python examples/gnn_train.py --steps 2 --impl pallas_tuned
       # CI smoke: one small config, asserts finite decreasing loss
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python examples/gnn_train.py --steps 2 --impl pallas_sharded --mesh 4,2
+      # multi-device: row segments over the 4-way "data" axis, feature
+      # columns over the 2-way "model" axis (DESIGN.md §12)
 """
 
 import argparse
@@ -40,7 +44,7 @@ def make_task(g, seed=0, num_classes=8, in_dim=64):
 
 
 def train_one(g, x_np, labels, train_mask, *, model, v, dtype, impl,
-              epochs, num_classes=8, in_dim=64, lr=5e-3):
+              epochs, num_classes=8, in_dim=64, lr=5e-3, mesh=None):
     cfg = GNNConfig(model=model, in_dim=in_dim,
                     hidden_dim=128 if model == "gcn" else 32,
                     num_classes=num_classes,
@@ -48,7 +52,7 @@ def train_one(g, x_np, labels, train_mask, *, model, v, dtype, impl,
                     impl=impl, dtype=dtype)
     fmt = from_coo(g.rows, g.cols, g.vals, (g.num_nodes, g.num_nodes),
                    vector_size=v, dtype=dtype)
-    adj = ad_plan(fmt, impl=impl, n_example=cfg.hidden_dim)
+    adj = ad_plan(fmt, impl=impl, n_example=cfg.hidden_dim, mesh=mesh)
     x = jnp.asarray(x_np, dtype)
     init = init_gcn if model == "gcn" else init_agnn
     params = init(jax.random.key(0), cfg)
@@ -73,11 +77,22 @@ def main():
     ap.add_argument("--model", default="both", choices=["gcn", "agnn", "both"])
     ap.add_argument("--impl", default="blocked",
                     help="registry impl: blocked | pallas | pallas_balanced "
-                         "| pallas_tuned")
+                         "| pallas_tuned | pallas_sharded")
     ap.add_argument("--steps", type=int, default=None,
                     help="smoke mode: run STEPS steps of one small config "
                          "and assert a finite loss decrease (CI gate)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="device grid for --impl pallas_sharded, e.g. 4,2 "
+                         "(row segments over 'data', heads/columns over "
+                         "'model'); on CPU force host devices first: "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import mesh_from_arg
+
+        mesh = mesh_from_arg(args.mesh)
 
     if args.steps is not None:
         # CI smoke: tiny graph, one (model, V=8, f32) config, hard asserts.
@@ -87,7 +102,8 @@ def main():
         x_np, labels, train_mask = make_task(g)
         losses, acc, dt = train_one(
             g, x_np, labels, train_mask, model=model, v=8,
-            dtype=jnp.float32, impl=args.impl, epochs=args.steps, lr=5e-2)
+            dtype=jnp.float32, impl=args.impl, epochs=args.steps, lr=5e-2,
+            mesh=mesh)
         print(f"smoke {model} impl={args.impl}: loss {losses[0]:.4f} -> "
               f"{losses[-1]:.4f} ({dt:.1f} ms/step)")
         assert all(np.isfinite(l) for l in losses), f"non-finite loss: {losses}"
@@ -108,7 +124,7 @@ def main():
             dtype = jnp.float32 if dtype_name == "f32" else jnp.bfloat16
             losses, acc, dt = train_one(
                 g, x_np, labels, train_mask, model=model, v=v, dtype=dtype,
-                impl=args.impl, epochs=args.epochs)
+                impl=args.impl, epochs=args.epochs, mesh=mesh)
             print(f"  {model:4s} V={v:2d} {dtype_name:4s} impl={args.impl}: "
                   f"{dt:7.1f} ms/epoch | loss {losses[-1]:.4f} | "
                   f"train acc {acc:.3f}")

@@ -63,13 +63,16 @@ def train_value_projection(plan, q, k, v, impl: str, steps: int,
     loss_grad = jax.jit(jax.value_and_grad(loss_fn))
     with sparse_dispatch.record_calls() as log:
         loss0, _ = loss_grad(w)
-    if impl in ("pallas", "pallas_balanced", "pallas_tuned"):
+    if impl in ("pallas", "pallas_balanced", "pallas_tuned",
+                "pallas_sharded"):
         n_fused = (log.count(("attention", "pallas_fused_attn"))
-                   + log.count(("attention", "pallas_balanced")))
+                   + log.count(("attention", "pallas_balanced"))
+                   + log.count(("attention", "pallas_sharded")))
         assert n_fused >= 1, f"train step did not hit the fused kernel: {log}"
         n_bwd = sum(1 for op, i in log
                     if op in ("spmm", "sddmm")
-                    and i in ("pallas_batched", "pallas_balanced"))
+                    and i in ("pallas_batched", "pallas_balanced",
+                              "pallas_sharded"))
         print(f"train step traced {n_fused} fused-megakernel forward and "
               f"{n_bwd} batched duality-kernel backward dispatches")
     losses = [float(loss0)]
@@ -88,19 +91,30 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--impl", default="blocked",
                     help="registry impl: blocked | pallas | "
-                         "pallas_balanced | pallas_tuned")
+                         "pallas_balanced | pallas_tuned | pallas_sharded")
     ap.add_argument("--seq", type=int, default=512)
     ap.add_argument("--heads", type=int, default=2)
     ap.add_argument("--steps", type=int, default=0,
                     help="run N training steps through the fused gradient "
                          "path after the parity checks")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="device grid for --impl pallas_sharded, e.g. 4,2 "
+                         "(sequence windows over 'data', heads over "
+                         "'model'); force host devices on CPU via "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import mesh_from_arg
+
+        mesh = mesh_from_arg(args.mesh)
 
     seq, d, heads = args.seq, 64, args.heads
     rows, cols = block_sparse_causal_pattern(seq)
     vals = np.ones_like(rows, np.float32)
     fmt = from_coo(rows, cols, vals, (seq, seq), vector_size=8)
-    plan = ad_plan(fmt, impl=args.impl, n_example=d)
+    plan = ad_plan(fmt, impl=args.impl, n_example=d, mesh=mesh)
     density = len(rows) / seq ** 2
     print(f"pattern: {len(rows):,} nonzeros of {seq * seq:,} "
           f"({density:.1%} dense) — compute saved vs full: {1 - density:.1%}")
@@ -112,10 +126,13 @@ def main():
 
     with sparse_dispatch.record_calls() as log:
         out_sparse = sparse_attention(plan, q, k, v, impl=args.impl)
-    if args.impl in ("pallas", "pallas_balanced", "pallas_tuned"):
-        # a tuned/balanced plan may route onto the block-parallel megakernel
+    if args.impl in ("pallas", "pallas_balanced", "pallas_tuned",
+                     "pallas_sharded"):
+        # a tuned/balanced/sharded plan may route onto the block-parallel
+        # or multi-device megakernel
         assert len(log) == 1 and log[0][0] == "attention" and \
-            log[0][1] in ("pallas_fused_attn", "pallas_balanced"), log
+            log[0][1] in ("pallas_fused_attn", "pallas_balanced",
+                          "pallas_sharded"), log
         print(f"forward: ONE fused megakernel launch for {heads} heads  ✓")
 
     # dense oracle: same mask through standard attention, per head

@@ -1,0 +1,71 @@
+"""Docs CI gate: run every documented code snippet; verify the impl matrix.
+
+  PYTHONPATH=src python scripts/check_docs.py
+
+Two checks, both designed so the docs cannot silently rot:
+
+1. **Snippets run.** Every fenced ```python block in README.md and
+   docs/*.md is executed in order within one namespace per file (later
+   blocks may use names defined by earlier ones, like a reader following
+   the page top to bottom).  Blocks fenced as ```text / ```bash / ```json
+   are illustrative and skipped.
+2. **The impl matrix is current.** The README's implementation table is
+   regenerated from the dispatch registry (scripts/impl_matrix.py) and
+   compared verbatim; registering a new impl without updating README
+   fails CI.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+_FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def run_snippets(path: pathlib.Path) -> int:
+    """Execute the file's ```python blocks in one shared namespace."""
+    blocks = _FENCE.findall(path.read_text())
+    ns: dict = {"__name__": f"docs_snippet_{path.stem}"}
+    for i, code in enumerate(blocks):
+        print(f"  {path.relative_to(ROOT)} block {i + 1}/{len(blocks)} "
+              f"({len(code.splitlines())} lines)")
+        try:
+            exec(compile(code, f"{path.name}[block {i + 1}]", "exec"), ns)
+        except Exception:
+            print(f"FAILED: snippet {i + 1} of {path}", file=sys.stderr)
+            raise
+    return len(blocks)
+
+
+def check_matrix() -> None:
+    sys.path.insert(0, str(ROOT / "scripts"))
+    from impl_matrix import impl_matrix
+
+    want = impl_matrix().strip()
+    readme = (ROOT / "README.md").read_text()
+    if want not in readme:
+        print("README impl matrix is stale — regenerate with:\n"
+              "  PYTHONPATH=src python scripts/impl_matrix.py",
+              file=sys.stderr)
+        print("\nexpected:\n" + want, file=sys.stderr)
+        raise SystemExit(1)
+    print("  README impl matrix matches the dispatch registry")
+
+
+def main() -> int:
+    total = 0
+    for path in DOCS:
+        if path.exists():
+            total += run_snippets(path)
+    check_matrix()
+    print(f"OK: {total} python snippets ran, impl matrix current")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,47 @@
+"""Generate the README implementation matrix from the dispatch registry.
+
+  PYTHONPATH=src python scripts/impl_matrix.py
+
+Prints a GitHub-markdown table of every registered (op, impl) pair with
+its capability flags, pulled live from :mod:`repro.core.dispatch` — the
+single source of truth every layer resolves implementations through.
+``scripts/check_docs.py`` regenerates this table in CI and fails if the
+committed README copy has drifted.
+"""
+
+from __future__ import annotations
+
+OPS = ("spmm", "sddmm", "attention")
+FLAGS = (
+    ("differentiable", "grad"),
+    ("batched", "batched"),
+    ("load_balanced", "balanced"),
+    ("multi_device", "multi-dev"),
+    ("needs_canonical", "canonical-in"),
+    ("returns_format", "format-out"),
+)
+
+
+def impl_matrix() -> str:
+    """The implementation matrix as a GitHub-markdown table string."""
+    from repro.core import dispatch
+
+    names = sorted({n for op in OPS for n in dispatch.impls(op)})
+    header = ["impl"] + [f"{op}" for op in OPS] + [lbl for _, lbl in FLAGS]
+    lines = ["| " + " | ".join(header) + " |",
+             "|" + "|".join("---" for _ in header) + "|"]
+    for name in names:
+        entries = {op: dispatch.get(op, name) for op in OPS
+                   if name in dispatch.impls(op)}
+        row = [f"`{name}`"]
+        row += ["✓" if op in entries else "—" for op in OPS]
+        for flag, _ in FLAGS:
+            vals = {getattr(e, flag) for e in entries.values()}
+            row.append("✓" if vals == {True} else
+                       ("—" if vals == {False} else "mixed"))
+        lines.append("| " + " | ".join(row) + " |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(impl_matrix())

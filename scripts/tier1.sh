@@ -45,5 +45,19 @@ with open("BENCH_spmm.json") as f:
 red = summary["balanced_cost_reduction_min"]
 print(f"skewed balanced-vs-window cost min {red:.2f}x")
 assert red >= 1.3, f"balanced scheduling floor regressed: {red}"
+# Device-level partitioner floor (DESIGN.md §12): balance_cost max/mean
+# across 8 devices must stay <= 1.25 on every skewed matrix — the
+# partitioner balances by the cost model, not just splits evenly.
+bal = summary["device_balance_max_over_mean_8dev"]
+print(f"8-device partition balance max/mean {bal:.3f}")
+assert bal <= 1.25, f"device partition balance regressed: {bal}"
 EOF
+
+  # Multi-device sharded smoke (DESIGN.md §12): two training steps through
+  # impl=pallas_sharded on an 8-way forced-host-device mesh — forward and
+  # both duality backward ops run one local balanced launch per device
+  # under shard_map, loss must decrease.
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python examples/gnn_train.py --steps 2 --impl pallas_sharded \
+    --mesh 4,2 --model gcn --scale 0.002
 fi

@@ -83,6 +83,19 @@ class ADPlan:
     # (hub *columns* of A become hub windows of Aᵀ).
     fwd_sched: Optional[Schedule] = None
     bwd_sched: Optional[Schedule] = None
+    # Multi-device partitions (DESIGN.md §12), present for
+    # impl="pallas_sharded": each direction's schedule partitioned over
+    # the mesh's "data" axis.  ``fwd_part``/``bwd_part`` allow cuts
+    # inside hub windows (the load-balancing lever — partial sums
+    # recombine in the psum) and drive the sharded SpMM/SDDMM;
+    # ``fwd_part_wa`` is the window-aligned variant the fused attention
+    # megakernel requires (its online-softmax state cannot straddle
+    # devices).  ``mesh`` rides in the pytree aux — jax.sharding.Mesh is
+    # hashable, so the plan stays a valid static structure under jit.
+    fwd_part: Optional[object] = None   # distributed.sparse_shard.ShardedSchedule
+    bwd_part: Optional[object] = None
+    fwd_part_wa: Optional[object] = None
+    mesh: Optional[object] = None       # jax.sharding.Mesh
 
     @property
     def vals(self) -> jax.Array:
@@ -114,16 +127,19 @@ class ADPlan:
 
     def tree_flatten(self):
         return ((self.fwd, self.bwd, self.perm, self.fwd_sched,
-                 self.bwd_sched),
-                (self.impl, self.n_blk, self.n_blk_t, self.f_blk))
+                 self.bwd_sched, self.fwd_part, self.bwd_part,
+                 self.fwd_part_wa),
+                (self.impl, self.n_blk, self.n_blk_t, self.f_blk, self.mesh))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        fwd, bwd, perm, fwd_sched, bwd_sched = leaves
-        impl, n_blk, n_blk_t, f_blk = aux
+        (fwd, bwd, perm, fwd_sched, bwd_sched, fwd_part, bwd_part,
+         fwd_part_wa) = leaves
+        impl, n_blk, n_blk_t, f_blk, mesh = aux
         return cls(fwd=fwd, bwd=bwd, perm=perm, impl=impl, n_blk=n_blk,
                    n_blk_t=n_blk_t, f_blk=f_blk, fwd_sched=fwd_sched,
-                   bwd_sched=bwd_sched)
+                   bwd_sched=bwd_sched, fwd_part=fwd_part,
+                   bwd_part=bwd_part, fwd_part_wa=fwd_part_wa, mesh=mesh)
 
 
 def _blocked_perm(blocked_a: BlockedMEBCRS,
@@ -159,7 +175,7 @@ def _blocked_perm(blocked_a: BlockedMEBCRS,
 def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
             n_blk: int = 128, f_blk: int = 128, split_blk: int = 1,
             n_example: int = 64, interpret: Optional[bool] = None,
-            cache=None) -> ADPlan:
+            cache=None, mesh=None) -> ADPlan:
     """Build (and memoize on ``fmt``) the differentiable-op plan.
 
     Host-side precompute, like ``block_format`` — call outside ``jit``.
@@ -171,13 +187,28 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
     :class:`Schedule` for **both** directions with ``split_blk`` (A and Aᵀ
     scheduled independently — the transpose has its own skew); a tuned
     plan carries a schedule for whichever direction the sweep preferred
-    balanced.
+    balanced.  ``impl="pallas_sharded"`` (DESIGN.md §12) additionally
+    partitions each direction's schedule over ``mesh``'s "data" axis —
+    cost-balanced with hub-window straddling allowed for SpMM/SDDMM,
+    plus a window-aligned forward variant for the fused attention
+    megakernel — so forward *and* both duality backward ops run one
+    local balanced launch per device with a psum.  ``mesh`` is required
+    (or an active ``distributed.ctx.activation_mesh``).
     """
     entry = _dispatch.require("spmm", impl, differentiable=True)
     del entry
     if isinstance(fmt, BlockedMEBCRS):
         raise ValueError("ad_plan needs the canonical MEBCRS (it blocks "
                          "both A and its transpose itself)")
+    if impl == "pallas_sharded":
+        from repro.distributed.sparse_shard import _resolve_mesh
+
+        mesh = _resolve_mesh(mesh)
+    elif mesh is not None:
+        raise ValueError(
+            f"ad_plan(mesh=...) is only meaningful for the multi-device "
+            f"impl 'pallas_sharded' (got impl={impl!r}); dropping the "
+            f"mesh would silently run single-device")
 
     # Only the tuned path consults interpret/cache (the tiles it picks
     # differ per execution mode and per cache file) — resolve them into
@@ -189,7 +220,7 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
         interp = ops._resolve_interpret(interpret)
         cache_tag = getattr(cache, "path", None) if cache is not None else None
     key = (impl, k_blk, n_blk, f_blk, int(split_blk), int(n_example), interp,
-           cache_tag)
+           cache_tag, mesh)
     memo = getattr(fmt, "_ad_plans", None)
     if memo is None:
         memo = {}
@@ -200,7 +231,8 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
     fmt_t = fmt.transpose()
     k_blk_f = k_blk_t = k_blk
     n_blk_t = n_blk
-    split_f = split_t = split_blk if impl == "pallas_balanced" else 0
+    split_f = split_t = (split_blk if impl in ("pallas_balanced",
+                                               "pallas_sharded") else 0)
     if impl == "pallas_tuned":
         from repro.kernels import autotune
 
@@ -220,16 +252,37 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
 
     blocked_f = block_format(fmt, k_blk_f)
     blocked_t = block_format(fmt_t, k_blk_t)
-    # pallas_balanced always carries schedules — split_blk = 0 is the valid
-    # *unsplit* schedule, not "no schedule"; for pallas_tuned a split of 0
-    # means the sweep chose the window-parallel kernel for that direction.
-    want_f = impl == "pallas_balanced" or split_f > 0
-    want_t = impl == "pallas_balanced" or split_t > 0
+    # pallas_balanced/_sharded always carry schedules — split_blk = 0 is the
+    # valid *unsplit* schedule, not "no schedule"; for pallas_tuned a split
+    # of 0 means the sweep chose the window-parallel kernel for that
+    # direction.
+    want_f = impl in ("pallas_balanced", "pallas_sharded") or split_f > 0
+    want_t = impl in ("pallas_balanced", "pallas_sharded") or split_t > 0
+    fwd_part = bwd_part = fwd_part_wa = None
+    if impl == "pallas_sharded":
+        from repro.distributed.sparse_shard import sharded_schedule
+
+        ndev = mesh.shape["data"]
+        # SpMM/SDDMM partitions may cut inside hub windows (the balance
+        # lever — partials recombine in the psum); attention gets its own
+        # window-aligned forward partition (softmax cannot straddle).
+        # Each direction's partition is cost-balanced for the tile that
+        # direction runs (SDDMM reuses fwd_part; its f_blk and the SpMM
+        # n_blk share the 128 default, and the cut positions are only
+        # mildly tile-sensitive).
+        fwd_part = sharded_schedule(blocked_f, ndev, split_blk=split_f,
+                                    n_blk=n_blk)
+        bwd_part = sharded_schedule(blocked_t, ndev, split_blk=split_t,
+                                    n_blk=n_blk_t)
+        fwd_part_wa = sharded_schedule(blocked_f, ndev, split_blk=split_f,
+                                       n_blk=n_blk, window_split=False)
     plan = ADPlan(fwd=blocked_f, bwd=blocked_t,
                   perm=jnp.asarray(_blocked_perm(blocked_f, blocked_t)),
                   impl=impl, n_blk=n_blk, n_blk_t=n_blk_t, f_blk=f_blk,
                   fwd_sched=blocked_f.schedule(split_f) if want_f else None,
-                  bwd_sched=blocked_t.schedule(split_t) if want_t else None)
+                  bwd_sched=blocked_t.schedule(split_t) if want_t else None,
+                  fwd_part=fwd_part, bwd_part=bwd_part,
+                  fwd_part_wa=fwd_part_wa, mesh=mesh)
     memo[key] = plan
     return plan
 
@@ -244,7 +297,7 @@ def _exec_impl(impl: str) -> str:
 
 def _is_pallas(impl: str) -> bool:
     """Pallas-family impls run native batched grids (no per-slice loop)."""
-    return _exec_impl(impl) in ("pallas", "pallas_balanced")
+    return _exec_impl(impl) in ("pallas", "pallas_balanced", "pallas_sharded")
 
 
 def _map_slices(entry, fn, batched_args, shared_args):
@@ -275,6 +328,18 @@ def _run_spmm(impl, interpret, plan: ADPlan, vals, b, *, transposed: bool):
     n_blk = plan.n_blk_t if transposed else plan.n_blk
     sched = plan.bwd_sched if transposed else plan.fwd_sched
     ex = _exec_impl(impl)
+    if ex == "pallas_sharded":
+        # one local balanced launch per device over this direction's own
+        # partition, outputs reassembled by the psum (DESIGN.md §12) —
+        # dB's transpose-SpMM runs on the Aᵀ partition, which is exactly
+        # the "psum for dB" of the sharded backward
+        return _dispatch.dispatch("spmm", "pallas_sharded",
+                                  with_values(blocked, vals), b,
+                                  k_blk=blocked.k_blk, n_blk=n_blk,
+                                  schedule=sched, mesh=plan.mesh,
+                                  part=plan.bwd_part if transposed
+                                  else plan.fwd_part,
+                                  interpret=interpret)
     if ex == "pallas_balanced" or (impl == "pallas_tuned"
                                    and sched is not None):
         # block-parallel (H, N/N_BLK, NS) grid with this direction's own
@@ -294,6 +359,12 @@ def _run_spmm(impl, interpret, plan: ADPlan, vals, b, *, transposed: bool):
 
 def _run_sddmm(impl, interpret, plan: ADPlan, q, k):
     ex = _exec_impl(impl)
+    if ex == "pallas_sharded":
+        # SDDMM samples A's pattern → the forward partition's block list
+        return _dispatch.dispatch("sddmm", "pallas_sharded", plan.fwd, q, k,
+                                  k_blk=plan.fwd.k_blk, f_blk=plan.f_blk,
+                                  schedule=plan.fwd_sched, mesh=plan.mesh,
+                                  part=plan.fwd_part, interpret=interpret)
     if ex == "pallas_balanced" or (impl == "pallas_tuned"
                                    and plan.fwd_sched is not None):
         # SDDMM samples A's pattern → the forward schedule's block list
@@ -461,6 +532,14 @@ def _staged_attention(impl, interpret, plan: ADPlan, q, k, v, scale):
 
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _attention_ad(impl, interpret, plan: ADPlan, q, k, v, scale):
+    if _exec_impl(impl) == "pallas_sharded":
+        # sharded single-pass megakernel on the window-aligned forward
+        # partition; the recompute backward (below) re-dispatches the
+        # sharded duality ops on each direction's own partition
+        return _dispatch.dispatch("attention", "pallas_sharded", plan.fwd,
+                                  q, k, v, scale=scale, k_blk=plan.fwd.k_blk,
+                                  schedule=plan.fwd_sched, mesh=plan.mesh,
+                                  part=plan.fwd_part_wa, interpret=interpret)
     if _exec_impl(impl) == "pallas_balanced" or (impl == "pallas_tuned"
                                                  and plan.fwd_sched
                                                  is not None):

@@ -37,6 +37,11 @@ Capability flags:
                    ragged per-window loops — accepts ``schedule=`` /
                    ``split_blk=`` kwargs and handles skewed matrices
                    without hub-window serialization
+  multi_device     the impl runs one local launch per device under
+                   ``shard_map`` over a partitioned Schedule
+                   (DESIGN.md §12) — accepts ``mesh=`` / ``part=``
+                   kwargs and produces outputs replicated over the
+                   mesh's "data" axis
 
 Providers self-register at import; :func:`get` lazily imports them so the
 table is complete no matter which layer touches the registry first.
@@ -80,6 +85,7 @@ class OpImpl:
     needs_canonical: bool = False
     returns_format: bool = False
     load_balanced: bool = False
+    multi_device: bool = False
 
 
 _REGISTRY: Dict[Tuple[str, str], OpImpl] = {}
@@ -88,7 +94,8 @@ _REGISTRY: Dict[Tuple[str, str], OpImpl] = {}
 # them lazily so the registry is fully populated regardless of entry point
 # (kernels are optional at core-import time, mirroring the old local
 # imports in core/spmm.py).
-_PROVIDERS = ("repro.core.spmm", "repro.core.sddmm", "repro.kernels.ops")
+_PROVIDERS = ("repro.core.spmm", "repro.core.sddmm", "repro.kernels.ops",
+              "repro.distributed.sparse_shard")
 _provider_errors: Dict[str, str] = {}
 _loaded = False
 _lock = threading.Lock()

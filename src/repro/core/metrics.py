@@ -115,6 +115,9 @@ def padded_flops(fmt: MEBCRS, n_cols: int, k_blk: int = 8) -> Dict[str, float]:
 
 
 def summarize(fmt: MEBCRS, n_cols: int, precision: str = "fp16") -> Dict[str, float]:
+    """One-dict redundancy summary of a format at feature width ``n_cols``:
+    vector/window counts, carried zeros, MMA invocations, padded FLOPs and
+    modeled access bytes — the paper's §2 motivation metrics in one call."""
     return {
         "V": fmt.vector_size,
         "windows": fmt.num_windows,

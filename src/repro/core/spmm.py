@@ -60,6 +60,9 @@ def _spmm_blocked_impl(blocked: BlockedMEBCRS, b: jax.Array, out_rows: int):
 
 
 def spmm_blocked(fmt, b: jax.Array, k_blk: int = 8) -> jax.Array:
+    """XLA swap-and-transpose SpMM: ``C (M, N) = A @ B`` over the blocked
+    view (``fmt`` may be canonical :class:`MEBCRS` or already blocked).
+    Returns ``(M, N)`` in ``b``'s dtype; fp32 accumulation."""
     blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
     return _spmm_blocked_impl(blocked, b, blocked.shape[0])
 

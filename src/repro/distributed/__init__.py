@@ -1,4 +1,6 @@
-"""Distribution layer: sharding rules, elastic resharding, comm overlap."""
+"""Distribution layer: sharding rules, elastic resharding, comm overlap,
+and the multi-device sharded sparse ops (shard_map over partitioned
+Schedules, DESIGN.md §12)."""
 
 from .sharding import (
     LOGICAL_AXIS_RULES,
@@ -8,6 +10,17 @@ from .sharding import (
     logical_spec_for,
     param_shardings,
     shardings_like,
+    sparse_format_shardings,
+    sparse_operand_pspec,
+)
+from .sparse_shard import (
+    ShardedSchedule,
+    attention_sharded,
+    device_balance,
+    partition_schedule,
+    sddmm_sharded,
+    sharded_schedule,
+    spmm_sharded,
 )
 
 __all__ = [
@@ -18,4 +31,13 @@ __all__ = [
     "logical_spec_for",
     "param_shardings",
     "shardings_like",
+    "sparse_format_shardings",
+    "sparse_operand_pspec",
+    "ShardedSchedule",
+    "partition_schedule",
+    "sharded_schedule",
+    "device_balance",
+    "spmm_sharded",
+    "sddmm_sharded",
+    "attention_sharded",
 ]

@@ -257,29 +257,53 @@ def batch_pspec(mesh: Mesh, extra_dims: int = 1) -> P:
 
 
 def sparse_format_shardings(fmt_tree: Any, mesh: Mesh) -> Any:
-    """Replicated shardings for a sparse-format pytree (``MEBCRS``,
-    ``BlockedMEBCRS`` or ``ADPlan``).
+    """Shardings for a sparse-format pytree (``MEBCRS``, ``BlockedMEBCRS``,
+    ``ADPlan``, or anything embedding a ``ShardedSchedule``).
 
     The pattern metadata (cols / win_ptr / mask / transpose perm) is tiny
     next to the dense operands — §6's footprint math puts ME-BCRS at
     ``4(W+NNZV) + 2·NNZV·V`` bytes, and the autodiff plan at ~2× that
     (DESIGN.md §9) — and the fused kernels scalar-prefetch it whole, so
-    every device keeps the full pattern and parallelism comes from
-    sharding the **dense** operands instead (:func:`sparse_operand_pspec`).
+    every device keeps the full pattern **replicated** and parallelism
+    comes from sharding the dense operands (:func:`sparse_operand_pspec`).
     This mirrors how the GNN baselines shard: graph replicated, feature
     matrices partitioned.
+
+    The one exception is the per-device partition arrays of a
+    :class:`~repro.distributed.sparse_shard.ShardedSchedule` (DESIGN.md
+    §12): their leading dim *is* the device dim, so they shard
+    ``P("data")`` — each device holds exactly its own sub-schedule and
+    the ``shard_map`` in_spec becomes a no-op data movement.
     """
-    return jax.tree.map(lambda _: NamedSharding(mesh, P()), fmt_tree)
+    from .sparse_shard import ShardedSchedule
+
+    def node_shardings(node):
+        if isinstance(node, ShardedSchedule):
+            return jax.tree.map(
+                lambda _: NamedSharding(mesh, P("data")), node)
+        return jax.tree.map(lambda _: NamedSharding(mesh, P()), node)
+
+    return jax.tree.map(node_shardings, fmt_tree,
+                        is_leaf=lambda n: isinstance(n, ShardedSchedule))
 
 
-def sparse_operand_pspec(mesh: Mesh, *, batched: bool = False) -> P:
+def sparse_operand_pspec(mesh: Mesh, *, batched: bool = False,
+                         heads_over_model: bool = False) -> P:
     """PartitionSpec for the dense operand of a sparse op.
 
     Rows (the contracted K dim) must stay whole per device — the kernel
     DMAs arbitrary rows by index — so the feature/N dim takes the "model"
     axis (TP) and an optional leading head/batch dim takes the data axes.
+
+    ``heads_over_model=True`` is the placement for the **sharded** sparse
+    ops (DESIGN.md §12), whose row parallelism lives *inside* the op (the
+    "data" axis carries schedule segments, not operand rows): the leading
+    head dim takes the "model" axis and everything else is replicated,
+    matching ``spmm_sharded``'s head-parallel in_specs.
     """
     feat = "model" if "model" in mesh.shape else None
+    if heads_over_model:
+        return P(feat) if (batched and feat) else P()
     if not batched:
         return P(None, feat)
     axes = tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -29,7 +29,7 @@ def _axis_kwargs(n: int) -> dict:
     """axis_types=Auto where supported; older Mesh lacks the kwarg."""
     return {} if AxisType is None else {"axis_types": (AxisType.Auto,) * n}
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "mesh_from_arg"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -46,6 +46,22 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
     dev_array = np.asarray(devices[:need]).reshape(shape)
     return Mesh(dev_array, axes, **_axis_kwargs(len(axes)))
+
+
+def mesh_from_arg(spec: str, *, verbose: bool = True) -> Mesh:
+    """Parse a ``--mesh DATA,MODEL`` CLI value (e.g. ``"4,2"``) into a
+    host mesh — the shared helper behind the examples' ``--mesh`` flags.
+    On CPU, force host devices first:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<DATA*MODEL>``."""
+    try:
+        data, model = (int(x) for x in spec.split(","))
+    except ValueError as e:
+        raise ValueError(
+            f"--mesh expects DATA,MODEL (e.g. 4,2), got {spec!r}") from e
+    mesh = make_host_mesh(data, model)
+    if verbose:
+        print(f"mesh: data={data} model={model} ({data * model} devices)")
+    return mesh
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:

@@ -25,6 +25,15 @@ The adjacency arrives either as
 
 ``cfg.impl`` is honored by **both** SpMM and SDDMM via the unified
 dispatch registry (:mod:`repro.core.dispatch`).
+
+Multi-device training (DESIGN.md §12): build the plan with
+``ad_plan(fmt, impl="pallas_sharded", mesh=make_host_mesh(data, model))``
+and set ``cfg.impl="pallas_sharded"`` — every aggregation (and its
+backward duality ops) then runs one local balanced launch per device
+under ``shard_map``, row segments over the mesh's "data" axis and
+heads/feature columns over "model".  The psum that reassembles each
+layer's output is exactly the row all-gather the next layer's global
+aggregation needs, so the model code here is unchanged.
 """
 
 from __future__ import annotations
@@ -54,7 +63,7 @@ class GNNConfig:
     num_classes: int = 16
     num_layers: int = 5             # paper: 5-layer GCN
     impl: str = "blocked"           # any registry impl: "blocked" | "pallas"
-                                    # | "pallas_tuned" | ...
+                                    # | "pallas_tuned" | "pallas_sharded" ...
     interpret: Any = None           # None = auto (compile on TPU)
     dtype: Any = jnp.float32
 
