@@ -24,12 +24,15 @@ from repro.core import dispatch as sparse_dispatch
 from repro.core.format import block_format, from_coo
 from repro.kernels.ops import attention_hbm_bytes
 
-from .common import attach_bench_json, suite, time_fn, write_csv
+from .common import attach_bench_json, dtype_bytes, suite, time_fn, write_csv
 
 IMPL_FUSED = "pallas_fused_attn"
 IMPL_STAGED = "pallas_staged"
 HEADS = (1, 4)
 D_HEAD = 32
+# precision levels recorded per (matrix, H): dtype tag → precision kwarg
+# (attention has no int8 level — per-K-block scales apply to SpMM values)
+DTYPE_LEVELS = (("float32", None), ("bfloat16", "bf16"))
 
 
 def _bench_matrix(g, heads) -> list:
@@ -43,27 +46,31 @@ def _bench_matrix(g, heads) -> list:
         q = jnp.asarray(rng.standard_normal((h, m, D_HEAD)).astype(np.float32))
         k = jnp.asarray(rng.standard_normal((h, m, D_HEAD)).astype(np.float32))
         v = jnp.asarray(rng.standard_normal((h, m, D_HEAD)).astype(np.float32))
-        for impl, model_impl in ((IMPL_FUSED, "fused"),
-                                 (IMPL_STAGED, "staged")):
-            fn = lambda: sparse_dispatch.dispatch(
-                "attention", impl, blocked, q, k, v, interpret=True)
-            ms = time_fn(fn, reps=3, warmup=1)
-            hbm = attention_hbm_bytes(blocked, D_HEAD, D_HEAD, h=h,
-                                      impl=model_impl)
-            recs.append({
-                "op": "attn",
-                "impl": impl,
-                "matrix": g.name,
-                "h": h,
-                # h is part of the shape key so fused/staged records pair
-                # up per head count in the BENCH summary
-                "shape": [m, m, D_HEAD, h],
-                "nnz": int(g.num_edges),
-                "median_ms": round(ms, 3),
-                "hbm_bytes": int(hbm),
-            })
-            print(f"  {g.name:16s} H={h} {impl:18s} {ms:8.2f} ms | "
-                  f"{hbm / 1e6:8.2f} MB modeled")
+        for dt, prec in DTYPE_LEVELS:
+            for impl, model_impl in ((IMPL_FUSED, "fused"),
+                                     (IMPL_STAGED, "staged")):
+                fn = lambda: sparse_dispatch.dispatch(
+                    "attention", impl, blocked, q, k, v, interpret=True,
+                    precision=prec)
+                ms = time_fn(fn, reps=3, warmup=1)
+                hbm = attention_hbm_bytes(blocked, D_HEAD, D_HEAD, h=h,
+                                          impl=model_impl,
+                                          value_bytes=dtype_bytes(dt))
+                recs.append({
+                    "op": "attn",
+                    "impl": impl,
+                    "matrix": g.name,
+                    "h": h,
+                    # h is part of the shape key so fused/staged records
+                    # pair up per head count in the BENCH summary
+                    "shape": [m, m, D_HEAD, h],
+                    "nnz": int(g.num_edges),
+                    "dtype": dt,
+                    "median_ms": round(ms, 3),
+                    "hbm_bytes": int(hbm),
+                })
+                print(f"  {g.name:16s} H={h} {impl:18s} {dt:8s} "
+                      f"{ms:8.2f} ms | {hbm / 1e6:8.2f} MB modeled")
     return recs
 
 
@@ -75,11 +82,11 @@ def run(scale: float = 0.02, heads=HEADS):
     for g in graphs:
         recs.extend(_bench_matrix(g, heads))
 
-    fused = {tuple(r["shape"]) + (r["matrix"],): r["hbm_bytes"]
+    fused = {tuple(r["shape"]) + (r["matrix"], r["dtype"]): r["hbm_bytes"]
              for r in recs if r["impl"] == IMPL_FUSED}
     violations = [r for r in recs if r["impl"] == IMPL_STAGED
                   and r["hbm_bytes"] <= fused[tuple(r["shape"])
-                                              + (r["matrix"],)]]
+                                              + (r["matrix"], r["dtype"])]]
     result = {}
     if violations:
         print(f"  WARNING: fused HBM not below staged on "

@@ -145,6 +145,18 @@ def balance_cost(blocked, n: int, *, impl: str = "window", schedule=None,
     return nj * makespan
 
 
+def dtype_bytes(dtype) -> int:
+    """Element size in bytes of ``dtype`` (handles ``"bfloat16"``).
+
+    The HBM-byte models take ``value_bytes=`` per operand; benches derive
+    it from the record's dtype with this instead of hard-coding 4.  Uses
+    ``jnp.dtype`` because plain numpy does not know bfloat16.
+    """
+    import jax.numpy as jnp
+
+    return int(jnp.dtype(dtype).itemsize)
+
+
 def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
     """Median wall ms of ``fn(*args)`` with block_until_ready."""
     for _ in range(warmup):
@@ -183,22 +195,39 @@ def emit_bench_json(recs: Sequence[Dict], path: str, *, op: str,
                     extra_summary: Dict = None) -> Dict:
     """Write a machine-readable BENCH_*.json and return its summary.
 
-    ``recs`` are per-(matrix, shape, impl) records carrying ``hbm_bytes``;
-    the summary aggregates the staged-baseline / fused traffic ratio that
-    CI floor-checks (see .github/workflows/ci.yml).  ``extra_summary``
-    entries are folded into the persisted summary (e.g. per-shape
-    strictness flags the bench computed itself, so CI asserts them
-    without re-deriving the record pairing).
+    ``recs`` are per-(matrix, shape, impl, dtype) records carrying
+    ``hbm_bytes``; the summary aggregates the staged-baseline / fused
+    traffic ratio that CI floor-checks (see .github/workflows/ci.yml).
+    Records without a ``dtype`` field count as float32; staged/fused
+    pairs match within a dtype.  When the fused impl carries both
+    float32 and bfloat16 records for a shape, the summary also reports
+    the modeled fp32/bf16 traffic ratio
+    (``hbm_reduction_geomean_bf16_vs_fp32`` — CI floors it at 1.8× for
+    the precision path, DESIGN.md §13).  ``extra_summary`` entries are
+    folded into the persisted summary (e.g. per-shape strictness flags
+    the bench computed itself, so CI asserts them without re-deriving
+    the record pairing).
     """
     import json
 
-    fused = {(r["matrix"], tuple(r["shape"])): r["hbm_bytes"]
-             for r in recs if r["impl"] == fused_impl}
-    ratios = [r["hbm_bytes"] / max(fused[(r["matrix"], tuple(r["shape"]))], 1)
-              for r in recs if r["impl"] == baseline_impl]
+    def _key(r):
+        return (r["matrix"], tuple(r["shape"]), r.get("dtype", "float32"))
+
+    fused = {_key(r): r["hbm_bytes"] for r in recs if r["impl"] == fused_impl}
+    ratios = [r["hbm_bytes"] / max(fused[_key(r)], 1)
+              for r in recs if r["impl"] == baseline_impl
+              and _key(r) in fused]
+    dt_ratios = [
+        fused[(m, s, "float32")] / max(b, 1)
+        for (m, s, dt), b in fused.items()
+        if dt == "bfloat16" and (m, s, "float32") in fused
+    ]
     summary = {
         "hbm_reduction_geomean_staged_vs_fused": geomean(ratios),
         "hbm_reduction_min_staged_vs_fused": min(ratios) if ratios else 0.0,
+        "hbm_reduction_geomean_bf16_vs_fp32": geomean(dt_ratios),
+        "hbm_reduction_min_bf16_vs_fp32":
+            min(dt_ratios) if dt_ratios else 0.0,
         "num_records": len(recs),
         **(extra_summary or {}),
     }

@@ -20,20 +20,31 @@ from repro.core import block_format, from_coo, spmm_blocked, spmm_coo_segment
 from repro.core.format import window_skew
 from repro.core.spmm import spmm_dense_ref
 
-from .common import attach_bench_json, balance_cost
+from .common import attach_bench_json, balance_cost, dtype_bytes
 from .common import emit_bench_json as common_emit
 from .common import geomean, skewed_suite, suite, time_fn, write_csv
+
+# precision levels recorded per shape for the fused kernel: dtype tag →
+# (precision kwarg, dense/out element bytes, sparse-value element bytes)
+DTYPE_LEVELS = (
+    ("float32", None, 4, 4),
+    ("bfloat16", "bf16", 2, 2),
+    ("int8", "int8", 2, 1),   # values int8 + fp32/blk scale, B/out bf16
+)
 
 
 def bench_records(scale: float = 0.002, n_values=(128,),
                   include_tuned: bool = True, verbose: bool = True):
-    """Machine-readable per-impl records (op, impl, shape, sparsity,
+    """Machine-readable per-impl records (op, impl, shape, sparsity, dtype,
     median_ms, hbm_bytes) for the perf trajectory (BENCH_spmm.json).
 
     Timed in interpret mode (kernel bodies run in Python), so ``scale`` is
     kept small; the modeled HBM bytes are exact structural counts either
     way.  ``pallas_staged`` is the pre-fusion staged-gather baseline the
-    fused kernel is regressed against.
+    fused kernel is regressed against.  The fused kernel is additionally
+    recorded per precision level (:data:`DTYPE_LEVELS`) with element-size-
+    aware HBM bytes — the bf16/fp32 modeled-traffic ratio is the CI floor
+    of the mixed-precision path (DESIGN.md §13).
     """
     from repro.kernels import ops
 
@@ -48,8 +59,6 @@ def bench_records(scale: float = 0.002, n_values=(128,),
                 (g.num_nodes, n)).astype(np.float32))
             n_blk_eff = min(128, max(n, 1))
             impls = [
-                ("pallas_fused", "fused", 8,
-                 lambda: ops.spmm(blocked, b, interpret=True)),
                 ("pallas_staged", "staged", 8,
                  lambda: ops.spmm_staged(blocked, b, interpret=True)),
                 ("pallas_noncoalesced", "noncoalesced", 8,
@@ -59,10 +68,24 @@ def bench_records(scale: float = 0.002, n_values=(128,),
                 recs.append({
                     "op": "spmm", "impl": impl, "matrix": g.name,
                     "shape": [shape[0], shape[1], n], "sparsity": sparsity,
+                    "dtype": "float32",
                     "vector_size": 8, "k_blk": k_blk, "n_blk": n_blk_eff,
                     "median_ms": time_fn(fn, reps=3, warmup=1),
                     "hbm_bytes": ops.spmm_hbm_bytes(
                         blocked, n, n_blk=n_blk_eff, impl=model),
+                })
+            for dt, prec, vb, vvb in DTYPE_LEVELS:
+                fn = lambda: ops.spmm(blocked, b, interpret=True,
+                                      precision=prec)
+                recs.append({
+                    "op": "spmm", "impl": "pallas_fused", "matrix": g.name,
+                    "shape": [shape[0], shape[1], n], "sparsity": sparsity,
+                    "dtype": dt,
+                    "vector_size": 8, "k_blk": 8, "n_blk": n_blk_eff,
+                    "median_ms": time_fn(fn, reps=3, warmup=1),
+                    "hbm_bytes": ops.spmm_hbm_bytes(
+                        blocked, n, n_blk=n_blk_eff, impl="fused",
+                        value_bytes=vb, vals_value_bytes=vvb),
                 })
             if include_tuned:
                 # the same tune → re-block plan users get from spmm_tuned
@@ -82,6 +105,7 @@ def bench_records(scale: float = 0.002, n_values=(128,),
                 recs.append({
                     "op": "spmm", "impl": "pallas_tuned", "matrix": g.name,
                     "shape": [shape[0], shape[1], n], "sparsity": sparsity,
+                    "dtype": "float32",
                     "vector_size": 8, "k_blk": cfg.k_blk, "n_blk": cfg.n_blk,
                     "split_blk": cfg.split_blk,
                     "median_ms": time_fn(run_t, reps=3, warmup=1),
@@ -91,10 +115,16 @@ def bench_records(scale: float = 0.002, n_values=(128,),
                 })
             if verbose:
                 by = {r["impl"]: r for r in recs
-                      if r["matrix"] == g.name and r["shape"][2] == n}
-                red = (by["pallas_staged"]["hbm_bytes"]
-                       / max(by["pallas_fused"]["hbm_bytes"], 1))
-                print(f"  {g.name:16s} N={n:3d} HBM staged/fused {red:.2f}x")
+                      if r["matrix"] == g.name and r["shape"][2] == n
+                      and r["dtype"] == "float32"}
+                fused32 = max(by["pallas_fused"]["hbm_bytes"], 1)
+                red = by["pallas_staged"]["hbm_bytes"] / fused32
+                bf16 = next(r["hbm_bytes"] for r in recs
+                            if r["matrix"] == g.name and r["shape"][2] == n
+                            and r["impl"] == "pallas_fused"
+                            and r["dtype"] == "bfloat16")
+                print(f"  {g.name:16s} N={n:3d} HBM staged/fused {red:.2f}x | "
+                      f"fp32/bf16 {fused32 / max(bf16, 1):.2f}x")
     return recs
 
 
@@ -147,6 +177,7 @@ def skewed_records(scale: float = 0.002, n_values=(128,),
                 recs.append({
                     "op": "spmm", "impl": impl, "matrix": g.name,
                     "shape": [shape[0], shape[1], n], "sparsity": sparsity,
+                    "dtype": "float32",
                     "skew_exponent": skew, "window_skew": round(wskew, 2),
                     "vector_size": 8, "k_blk": 8, "n_blk": n_blk_eff,
                     "split_blk": split_blk if impl == "pallas_balanced" else 0,
@@ -201,6 +232,7 @@ def device_balance_records(scale: float = 0.002, num_devices=(2, 4, 8),
                 recs.append({
                     "op": "spmm", "impl": "pallas_sharded",
                     "matrix": g.name, "shape": [shape[0], shape[1], 128],
+                    "dtype": "float32",
                     "skew_exponent": skew, "window_skew": round(wskew, 2),
                     "vector_size": 8, "k_blk": 8, "split_blk": split_blk,
                     "num_devices": ndev, "window_split": window_split,

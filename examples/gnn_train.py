@@ -86,6 +86,11 @@ def main():
                          "(row segments over 'data', heads/columns over "
                          "'model'); on CPU force host devices first: "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    ap.add_argument("--dtype", default="f32", choices=["f32", "bf16"],
+                    help="activation/weight dtype of the smoke config "
+                         "(--steps): bf16 runs the mixed-precision kernel "
+                         "path end to end, fp32 masters in the optimizer "
+                         "(DESIGN.md §13)")
     args = ap.parse_args()
 
     mesh = None
@@ -95,16 +100,18 @@ def main():
         mesh = mesh_from_arg(args.mesh)
 
     if args.steps is not None:
-        # CI smoke: tiny graph, one (model, V=8, f32) config, hard asserts.
+        # CI smoke: tiny graph, one (model, V=8) config, hard asserts.
         scale = min(args.scale, 0.002)
         model = args.model if args.model != "both" else "gcn"
+        dtype = jnp.float32 if args.dtype == "f32" else jnp.bfloat16
         g = make_dataset(args.graph, scale=scale)
         x_np, labels, train_mask = make_task(g)
         losses, acc, dt = train_one(
             g, x_np, labels, train_mask, model=model, v=8,
-            dtype=jnp.float32, impl=args.impl, epochs=args.steps, lr=5e-2,
+            dtype=dtype, impl=args.impl, epochs=args.steps, lr=5e-2,
             mesh=mesh)
-        print(f"smoke {model} impl={args.impl}: loss {losses[0]:.4f} -> "
+        print(f"smoke {model} impl={args.impl} dtype={args.dtype}: "
+              f"loss {losses[0]:.4f} -> "
               f"{losses[-1]:.4f} ({dt:.1f} ms/step)")
         assert all(np.isfinite(l) for l in losses), f"non-finite loss: {losses}"
         assert losses[-1] < losses[0], \

@@ -22,12 +22,22 @@ FLAGS = (
 )
 
 
+def _precision_cell(entries) -> str:
+    """Union of precision levels over the ops an impl serves, in canonical
+    order (DESIGN.md §13) — fp32-only renders as a dash (the default)."""
+    levels = {p for e in entries.values() for p in e.precisions}
+    if levels <= {"fp32"}:
+        return "—"
+    return "/".join(p for p in ("fp32", "bf16", "int8") if p in levels)
+
+
 def impl_matrix() -> str:
     """The implementation matrix as a GitHub-markdown table string."""
     from repro.core import dispatch
 
     names = sorted({n for op in OPS for n in dispatch.impls(op)})
-    header = ["impl"] + [f"{op}" for op in OPS] + [lbl for _, lbl in FLAGS]
+    header = (["impl"] + [f"{op}" for op in OPS]
+              + [lbl for _, lbl in FLAGS] + ["precision"])
     lines = ["| " + " | ".join(header) + " |",
              "|" + "|".join("---" for _ in header) + "|"]
     for name in names:
@@ -39,6 +49,7 @@ def impl_matrix() -> str:
             vals = {getattr(e, flag) for e in entries.values()}
             row.append("✓" if vals == {True} else
                        ("—" if vals == {False} else "mixed"))
+        row.append(_precision_cell(entries))
         lines.append("| " + " | ".join(row) + " |")
     return "\n".join(lines)
 

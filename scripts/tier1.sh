@@ -51,6 +51,12 @@ assert red >= 1.3, f"balanced scheduling floor regressed: {red}"
 bal = summary["device_balance_max_over_mean_8dev"]
 print(f"8-device partition balance max/mean {bal:.3f}")
 assert bal <= 1.25, f"device partition balance regressed: {bal}"
+# Mixed-precision floor (DESIGN.md §13): the bf16 fused-SpMM records must
+# model >= 1.8x less HBM traffic than fp32 on the standard suite (< 2x
+# only because the int32 metadata stream does not narrow).
+mp = summary["hbm_reduction_geomean_bf16_vs_fp32"]
+print(f"bf16/fp32 modeled HBM reduction geomean {mp:.2f}x")
+assert mp >= 1.8, f"mixed-precision HBM floor regressed: {mp}"
 EOF
 
   # Multi-device sharded smoke (DESIGN.md §12): two training steps through

@@ -96,6 +96,11 @@ class ADPlan:
     bwd_part: Optional[object] = None
     fwd_part_wa: Optional[object] = None
     mesh: Optional[object] = None       # jax.sharding.Mesh
+    # Mixed-precision level (DESIGN.md §13) every traced call runs at:
+    # None = operand dtypes as given; "int8" quantizes the forward SpMM's
+    # sparse values per K-block *in trace* (fp32 masters, straight-through
+    # gradients) while every other op runs the bf16 dense level.
+    precision: Optional[str] = None
 
     @property
     def vals(self) -> jax.Array:
@@ -129,17 +134,19 @@ class ADPlan:
         return ((self.fwd, self.bwd, self.perm, self.fwd_sched,
                  self.bwd_sched, self.fwd_part, self.bwd_part,
                  self.fwd_part_wa),
-                (self.impl, self.n_blk, self.n_blk_t, self.f_blk, self.mesh))
+                (self.impl, self.n_blk, self.n_blk_t, self.f_blk, self.mesh,
+                 self.precision))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         (fwd, bwd, perm, fwd_sched, bwd_sched, fwd_part, bwd_part,
          fwd_part_wa) = leaves
-        impl, n_blk, n_blk_t, f_blk, mesh = aux
+        impl, n_blk, n_blk_t, f_blk, mesh, precision = aux
         return cls(fwd=fwd, bwd=bwd, perm=perm, impl=impl, n_blk=n_blk,
                    n_blk_t=n_blk_t, f_blk=f_blk, fwd_sched=fwd_sched,
                    bwd_sched=bwd_sched, fwd_part=fwd_part,
-                   bwd_part=bwd_part, fwd_part_wa=fwd_part_wa, mesh=mesh)
+                   bwd_part=bwd_part, fwd_part_wa=fwd_part_wa, mesh=mesh,
+                   precision=precision)
 
 
 def _blocked_perm(blocked_a: BlockedMEBCRS,
@@ -175,7 +182,8 @@ def _blocked_perm(blocked_a: BlockedMEBCRS,
 def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
             n_blk: int = 128, f_blk: int = 128, split_blk: int = 1,
             n_example: int = 64, interpret: Optional[bool] = None,
-            cache=None, mesh=None) -> ADPlan:
+            cache=None, mesh=None,
+            precision: Optional[str] = None) -> ADPlan:
     """Build (and memoize on ``fmt``) the differentiable-op plan.
 
     Host-side precompute, like ``block_format`` — call outside ``jit``.
@@ -194,9 +202,23 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
     megakernel — so forward *and* both duality backward ops run one
     local balanced launch per device with a psum.  ``mesh`` is required
     (or an active ``distributed.ctx.activation_mesh``).
+
+    ``precision`` fixes the mixed-precision level of every traced call on
+    the plan (DESIGN.md §13): the forward SpMM runs it as given (``int8``
+    quantizes the fp32 master values per K-block in-trace), all other ops
+    — SDDMM, attention, both duality backward ops — run the *dense level*
+    (bf16 for an int8 plan), and the custom_vjp epilogues cast gradients
+    back to the residuals' dtypes, so fp32 masters accumulate fp32.
     """
-    entry = _dispatch.require("spmm", impl, differentiable=True)
+    from .quantize import validate_precision
+
+    validate_precision(precision)
+    entry = _dispatch.require("spmm", impl, differentiable=True,
+                              precision=precision)
     del entry
+    if precision is not None:
+        _dispatch.require("sddmm", impl, differentiable=True,
+                          precision=_dense_precision(precision))
     if isinstance(fmt, BlockedMEBCRS):
         raise ValueError("ad_plan needs the canonical MEBCRS (it blocks "
                          "both A and its transpose itself)")
@@ -220,7 +242,7 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
         interp = ops._resolve_interpret(interpret)
         cache_tag = getattr(cache, "path", None) if cache is not None else None
     key = (impl, k_blk, n_blk, f_blk, int(split_blk), int(n_example), interp,
-           cache_tag, mesh)
+           cache_tag, mesh, precision)
     memo = getattr(fmt, "_ad_plans", None)
     if memo is None:
         memo = {}
@@ -240,11 +262,18 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
         dt = fmt.values.dtype
         b_ex = jnp.zeros((k, n_example), dt)
         g_ex = jnp.zeros((m, n_example), dt)
-        cfg_f = autotune.tune_spmm(fmt, b_ex, interpret=interp, cache=cache)
-        cfg_t = autotune.tune_spmm(fmt_t, g_ex, interpret=interp, cache=cache)
+        # pin the sweep to the plan's precision so the timings match the
+        # path the traced calls will run
+        pk = {} if precision is None else {"precisions": (precision,)}
+        pk_d = ({} if precision is None
+                else {"precisions": (_dense_precision(precision),)})
+        cfg_f = autotune.tune_spmm(fmt, b_ex, interpret=interp, cache=cache,
+                                   **pk)
+        cfg_t = autotune.tune_spmm(fmt_t, g_ex, interpret=interp, cache=cache,
+                                   **pk)
         # dVals must land in the forward value layout → pin the SDDMM k_blk
         cfg_s = autotune.tune_sddmm(fmt, g_ex, b_ex, k_blks=(cfg_f.k_blk,),
-                                    interpret=interp, cache=cache)
+                                    interpret=interp, cache=cache, **pk_d)
         k_blk_f, n_blk = cfg_f.k_blk, cfg_f.n_blk
         k_blk_t, n_blk_t = cfg_t.k_blk, cfg_t.n_blk
         f_blk = cfg_s.n_blk
@@ -282,9 +311,17 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
                   fwd_sched=blocked_f.schedule(split_f) if want_f else None,
                   bwd_sched=blocked_t.schedule(split_t) if want_t else None,
                   fwd_part=fwd_part, bwd_part=bwd_part,
-                  fwd_part_wa=fwd_part_wa, mesh=mesh)
+                  fwd_part_wa=fwd_part_wa, mesh=mesh, precision=precision)
     memo[key] = plan
     return plan
+
+
+def _dense_precision(precision: Optional[str]) -> Optional[str]:
+    """The precision level of every op except the forward SpMM's sparse
+    values: int8 applies only there (per-K-block scales); its gradient
+    path, SDDMM, and attention run bf16 — gradients stay straight-through
+    to the fp32 masters."""
+    return "bf16" if precision == "int8" else precision
 
 
 def _exec_impl(impl: str) -> str:
@@ -323,7 +360,8 @@ def _map_slices(entry, fn, batched_args, shared_args):
 # ---------------------------------------------------------------------------
 
 
-def _run_spmm(impl, interpret, plan: ADPlan, vals, b, *, transposed: bool):
+def _run_spmm(impl, interpret, plan: ADPlan, vals, b, *, transposed: bool,
+              precision=None):
     blocked = plan.bwd if transposed else plan.fwd
     n_blk = plan.n_blk_t if transposed else plan.n_blk
     sched = plan.bwd_sched if transposed else plan.fwd_sched
@@ -339,7 +377,7 @@ def _run_spmm(impl, interpret, plan: ADPlan, vals, b, *, transposed: bool):
                                   schedule=sched, mesh=plan.mesh,
                                   part=plan.bwd_part if transposed
                                   else plan.fwd_part,
-                                  interpret=interpret)
+                                  interpret=interpret, precision=precision)
     if ex == "pallas_balanced" or (impl == "pallas_tuned"
                                    and sched is not None):
         # block-parallel (H, N/N_BLK, NS) grid with this direction's own
@@ -347,37 +385,40 @@ def _run_spmm(impl, interpret, plan: ADPlan, vals, b, *, transposed: bool):
         return _dispatch.dispatch("spmm", "pallas_balanced",
                                   with_values(blocked, vals), b,
                                   k_blk=blocked.k_blk, n_blk=n_blk,
-                                  schedule=sched, interpret=interpret)
+                                  schedule=sched, interpret=interpret,
+                                  precision=precision)
     if ex == "pallas" and (vals.ndim == 3 or b.ndim == 3):
         # native (H, N/N_BLK, W) grid: one launch for every head
         ex = "pallas_batched"
     return _dispatch.dispatch("spmm", ex,
                               with_values(blocked, vals), b,
                               k_blk=blocked.k_blk, n_blk=n_blk,
-                              interpret=interpret)
+                              interpret=interpret, precision=precision)
 
 
-def _run_sddmm(impl, interpret, plan: ADPlan, q, k):
+def _run_sddmm(impl, interpret, plan: ADPlan, q, k, *, precision=None):
+    precision = _dense_precision(precision)   # SDDMM has no int8 level
     ex = _exec_impl(impl)
     if ex == "pallas_sharded":
         # SDDMM samples A's pattern → the forward partition's block list
         return _dispatch.dispatch("sddmm", "pallas_sharded", plan.fwd, q, k,
                                   k_blk=plan.fwd.k_blk, f_blk=plan.f_blk,
                                   schedule=plan.fwd_sched, mesh=plan.mesh,
-                                  part=plan.fwd_part, interpret=interpret)
+                                  part=plan.fwd_part, interpret=interpret,
+                                  precision=precision)
     if ex == "pallas_balanced" or (impl == "pallas_tuned"
                                    and plan.fwd_sched is not None):
         # SDDMM samples A's pattern → the forward schedule's block list
         return _dispatch.dispatch("sddmm", "pallas_balanced", plan.fwd, q, k,
                                   k_blk=plan.fwd.k_blk, f_blk=plan.f_blk,
                                   schedule=plan.fwd_sched,
-                                  interpret=interpret)
+                                  interpret=interpret, precision=precision)
     if ex == "pallas" and (q.ndim == 3 or k.ndim == 3):
         # native (H, NB, F/F_BLK) grid: one launch for every head
         ex = "pallas_batched"
     return _dispatch.dispatch("sddmm", ex, plan.fwd, q, k,
                               k_blk=plan.fwd.k_blk, f_blk=plan.f_blk,
-                              interpret=interpret)
+                              interpret=interpret, precision=precision)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
@@ -385,10 +426,12 @@ def _spmm_ad(impl, interpret, plan: ADPlan, vals, b):
     vals_m = vals * plan.fwd.mask  # masked entries are structural zeros
     vb, bb = vals.ndim == 3, b.ndim == 3
     if not (vb or bb) or _is_pallas(impl):
-        return _run_spmm(impl, interpret, plan, vals_m, b, transposed=False)
+        return _run_spmm(impl, interpret, plan, vals_m, b, transposed=False,
+                         precision=plan.precision)
     entry = _dispatch.get("spmm", _exec_impl(impl))
     run = lambda v_, b_: _run_spmm(impl, interpret, plan, v_, b_,
-                                   transposed=False)
+                                   transposed=False,
+                                   precision=plan.precision)
     return _map_slices(entry, run, [(vals_m, vb), (b, bb)], ())
 
 
@@ -400,13 +443,18 @@ def _spmm_ad_bwd(impl, interpret, res, g):
     plan, vals, b = res
     vb, bb = vals.ndim == 3, b.ndim == 3
 
+    # The duality backward runs the *dense* precision level — straight-
+    # through: int8 never quantizes cotangents, and dvals/db cast back to
+    # the residuals' (master) dtypes below.
+    bwd_prec = _dense_precision(plan.precision)
+
     def d_b(v_, g_):      # dB = Aᵀ G — transpose-SpMM through the registry
         return _run_spmm(impl, interpret, plan,
                          plan.transpose_vals(v_ * plan.fwd.mask), g_,
-                         transposed=True)
+                         transposed=True, precision=bwd_prec)
 
     def d_vals(g_, b_):   # dVals = mask ⊙ SDDMM(G, B) (impls mask in-epilogue)
-        return _run_sddmm(impl, interpret, plan, g_, b_)
+        return _run_sddmm(impl, interpret, plan, g_, b_, precision=bwd_prec)
 
     if not (vb or bb):
         db = d_b(vals, g)
@@ -456,10 +504,12 @@ def spmm_ad(plan: ADPlan, vals: jax.Array, b: jax.Array, *,
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _sddmm_ad(impl, interpret, plan: ADPlan, q, k):
     qb, kb = q.ndim == 3, k.ndim == 3
+    prec = _dense_precision(plan.precision)
     if not (qb or kb) or _is_pallas(impl):
-        return _run_sddmm(impl, interpret, plan, q, k)
+        return _run_sddmm(impl, interpret, plan, q, k, precision=prec)
     entry = _dispatch.get("sddmm", _exec_impl(impl))
-    run = lambda q_, k_: _run_sddmm(impl, interpret, plan, q_, k_)
+    run = lambda q_, k_: _run_sddmm(impl, interpret, plan, q_, k_,
+                                    precision=prec)
     return _map_slices(entry, run, [(q, qb), (k, kb)], ())
 
 
@@ -472,14 +522,18 @@ def _sddmm_ad_bwd(impl, interpret, res, g):
     qb, kb = q.ndim == 3, k.ndim == 3
     mask = plan.fwd.mask
 
+    bwd_prec = _dense_precision(plan.precision)  # never quantize cotangents
+
     def d_q(g_, k_):      # dQ = A⟨g⟩ @ K — SpMM with the cotangent bound
         return _run_spmm(impl, interpret, plan, g_ * mask, k_,
-                         transposed=False)[..., : q.shape[-2], :]
+                         transposed=False,
+                         precision=bwd_prec)[..., : q.shape[-2], :]
 
     def d_k(g_, q_):      # dK = Aᵀ⟨g⟩ @ Q — transpose-SpMM
         return _run_spmm(impl, interpret, plan,
                          plan.transpose_vals(g_ * mask), q_,
-                         transposed=True)[..., : k.shape[-2], :]
+                         transposed=True,
+                         precision=bwd_prec)[..., : k.shape[-2], :]
 
     if not (qb or kb):
         dq, dk = d_q(g, k), d_k(g, q)
@@ -539,7 +593,8 @@ def _attention_ad(impl, interpret, plan: ADPlan, q, k, v, scale):
         return _dispatch.dispatch("attention", "pallas_sharded", plan.fwd,
                                   q, k, v, scale=scale, k_blk=plan.fwd.k_blk,
                                   schedule=plan.fwd_sched, mesh=plan.mesh,
-                                  part=plan.fwd_part_wa, interpret=interpret)
+                                  part=plan.fwd_part_wa, interpret=interpret,
+                                  precision=_dense_precision(plan.precision))
     if _exec_impl(impl) == "pallas_balanced" or (impl == "pallas_tuned"
                                                  and plan.fwd_sched
                                                  is not None):
@@ -549,10 +604,12 @@ def _attention_ad(impl, interpret, plan: ADPlan, q, k, v, scale):
                                   q, k, v, scale=scale,
                                   k_blk=plan.fwd.k_blk,
                                   schedule=plan.fwd_sched,
-                                  interpret=interpret)
+                                  interpret=interpret,
+                                  precision=_dense_precision(plan.precision))
     return _dispatch.dispatch("attention", "pallas_fused_attn", plan.fwd,
                               q, k, v, scale=scale, k_blk=plan.fwd.k_blk,
-                              interpret=interpret)
+                              interpret=interpret,
+                              precision=_dense_precision(plan.precision))
 
 
 def _attention_ad_fwd(impl, interpret, plan, q, k, v, scale):
@@ -611,6 +668,10 @@ def attention_ad(plan: ADPlan, q: jax.Array, k: jax.Array, v: jax.Array, *,
     impl = impl or plan.impl
     _dispatch.require("spmm", impl, differentiable=True)
     _dispatch.require("sddmm", impl, differentiable=True)
+    if plan.precision == "int8":
+        # attention has no int8 level: run the whole composition — the
+        # recompute backward included — at the plan's dense level (bf16)
+        plan = dataclasses.replace(plan, precision="bf16")
     if scale is None:
         scale = 1.0 / float(np.sqrt(q.shape[-1]))
     scale = jnp.asarray(scale, jnp.float32)

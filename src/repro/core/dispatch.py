@@ -43,6 +43,11 @@ Capability flags:
                    kwargs and produces outputs replicated over the
                    mesh's "data" axis
 
+plus the ``precisions`` capability tuple (DESIGN.md §13): the precision
+levels the impl accepts via its ``precision=`` kwarg — a subset of
+``("fp32", "bf16", "int8")``; every impl defaults to fp32-only.
+``require(..., precision=...)`` enforces it.
+
 Providers self-register at import; :func:`get` lazily imports them so the
 table is complete no matter which layer touches the registry first.
 
@@ -86,6 +91,7 @@ class OpImpl:
     returns_format: bool = False
     load_balanced: bool = False
     multi_device: bool = False
+    precisions: Tuple[str, ...] = ("fp32",)
 
 
 _REGISTRY: Dict[Tuple[str, str], OpImpl] = {}
@@ -148,9 +154,17 @@ def impls(op: str) -> Tuple[str, ...]:
 
 
 def require(op: str, impl: str, *, differentiable: bool = False,
-            batched: bool = False) -> OpImpl:
+            batched: bool = False,
+            precision: Optional[str] = None) -> OpImpl:
     """Resolve and enforce capability flags, with a targeted error."""
     entry = get(op, impl)
+    if precision is not None and precision not in entry.precisions:
+        ok = [n for n in impls(op)
+              if precision in _REGISTRY[(op, n)].precisions]
+        raise ValueError(
+            f"impl {impl!r} of op {op!r} does not support precision "
+            f"{precision!r} (supports: {', '.join(entry.precisions)}); "
+            f"impls with {precision!r}: {', '.join(ok) or '(none)'}")
     if differentiable and not entry.differentiable:
         ok = [n for n in impls(op) if _REGISTRY[(op, n)].differentiable]
         raise ValueError(

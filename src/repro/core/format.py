@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -143,6 +143,11 @@ class BlockedMEBCRS:
     shape: Tuple[int, int]
     vector_size: int
     k_blk: int
+    # Optional per-K-block dequantization scales (NB,) fp32: set (alongside
+    # int8 ``vals``) by :func:`repro.core.quantize.quantize_format`; the
+    # Pallas SpMM kernels scalar-prefetch them and dequantize in-VMEM
+    # (DESIGN.md §13).  ``None`` on every unquantized format.
+    scales: Optional[jax.Array] = None
 
     @property
     def num_blocks(self) -> int:
@@ -154,13 +159,14 @@ class BlockedMEBCRS:
 
     def tree_flatten(self):
         leaves = (self.vals, self.cols, self.mask, self.block_win,
-                  self.win_ptr)
+                  self.win_ptr, self.scales)
         return leaves, (self.shape, self.vector_size, self.k_blk)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         shape, v, k = aux
-        return cls(*leaves, shape=shape, vector_size=v, k_blk=k)
+        return cls(*leaves[:5], shape=shape, vector_size=v, k_blk=k,
+                   scales=leaves[5])
 
     def schedule(self, split_blk: int = 1) -> "Schedule":
         """Block-parallel execution :class:`Schedule` (memoized per

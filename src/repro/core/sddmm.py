@@ -64,7 +64,7 @@ def sddmm_coo(rows, cols, q, k):
 def sddmm(fmt, q: jax.Array, k: jax.Array, impl: str = "blocked",
           k_blk: int = 8, interpret: bool | None = None,
           f_blk: int | None = None, split_blk: int | None = None,
-          schedule=None):
+          schedule=None, precision: str | None = None):
     """SDDMM dispatch through the unified registry → blocked-layout values.
 
     ``impl`` names a registered implementation (``dispatch.impls("sddmm")``:
@@ -78,6 +78,10 @@ def sddmm(fmt, q: jax.Array, k: jax.Array, impl: str = "blocked",
     ``returns_format``).  ``split_blk``/``schedule`` parameterize the
     schedule-driven ``pallas_balanced`` grid (DESIGN.md §11).
 
+    ``precision`` selects the mixed-precision path (DESIGN.md §13:
+    ``"fp32"``/``"bf16"``; SDDMM has no int8 level) and is
+    capability-checked against the impl's registry entry.
+
     Compose with SpMM by replacing ``blocked.vals`` (see
     :func:`with_values`).
     """
@@ -88,6 +92,9 @@ def sddmm(fmt, q: jax.Array, k: jax.Array, impl: str = "blocked",
         kwargs["split_blk"] = split_blk
     if schedule is not None:
         kwargs["schedule"] = schedule
+    if precision is not None:
+        _dispatch.require("sddmm", impl, precision=precision)
+        kwargs["precision"] = precision
     return _dispatch.dispatch("sddmm", impl, fmt, q, k, **kwargs)
 
 
@@ -99,8 +106,12 @@ def sddmm(fmt, q: jax.Array, k: jax.Array, impl: str = "blocked",
 
 def _sddmm_blocked_adapter(fmt, q, k, *, k_blk: int = 8,
                            f_blk: int | None = None,
-                           interpret: bool | None = None):
+                           interpret: bool | None = None,
+                           precision: str | None = None):
     del f_blk, interpret
+    from .quantize import cast_precision
+
+    q, k = cast_precision(precision, q, k)
     blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
     return _sddmm_blocked_impl(blocked, q, k)
 
@@ -115,10 +126,15 @@ def _sddmm_coo_adapter(fmt, q, k, *, k_blk: int = 8, f_blk: int | None = None,
 
 
 _dispatch.register("sddmm", "blocked", _sddmm_blocked_adapter,
-                   differentiable=True, batched=True)
+                   differentiable=True, batched=True,
+                   precisions=("fp32", "bf16"))
 _dispatch.register("sddmm", "coo", _sddmm_coo_adapter)
 
 
 def with_values(blocked: BlockedMEBCRS, new_vals: jax.Array) -> BlockedMEBCRS:
-    """Rebind values (e.g. SDDMM output → SpMM input), keeping the pattern."""
-    return dataclasses.replace(blocked, vals=new_vals)
+    """Rebind values (e.g. SDDMM output → SpMM input), keeping the pattern.
+
+    Any per-K-block quantization ``scales`` are dropped — they describe the
+    *old* values; re-quantize via
+    :func:`repro.core.quantize.quantize_format` if needed."""
+    return dataclasses.replace(blocked, vals=new_vals, scales=None)

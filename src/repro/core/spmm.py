@@ -22,6 +22,7 @@ Three execution paths:
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -64,6 +65,7 @@ def spmm_blocked(fmt, b: jax.Array, k_blk: int = 8) -> jax.Array:
     view (``fmt`` may be canonical :class:`MEBCRS` or already blocked).
     Returns ``(M, N)`` in ``b``'s dtype; fp32 accumulation."""
     blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
+    blocked, b = _precision_blocked(blocked, b, None)  # dequantize int8 formats
     return _spmm_blocked_impl(blocked, b, blocked.shape[0])
 
 
@@ -76,7 +78,8 @@ def spmm_coo_segment(rows, cols, vals, b, num_rows: int):
 
 def spmm(fmt: MEBCRS, b: jax.Array, impl: str = "blocked", k_blk: int = 8,
          interpret: bool | None = None, n_blk: int | None = None,
-         split_blk: int | None = None, schedule=None) -> jax.Array:
+         split_blk: int | None = None, schedule=None,
+         precision: str | None = None) -> jax.Array:
     """SpMM dispatch through the unified registry (:mod:`repro.core.dispatch`).
 
     ``impl`` names a registered implementation (``dispatch.impls("spmm")``
@@ -90,6 +93,9 @@ def spmm(fmt: MEBCRS, b: jax.Array, impl: str = "blocked", k_blk: int = 8,
     candidate); an explicit ``n_blk`` overrides the column tile of the
     non-tuned Pallas paths.  ``split_blk``/``schedule`` parameterize the
     block-parallel ``pallas_balanced`` grid (DESIGN.md §11).
+    ``precision`` selects the mixed-precision path (DESIGN.md §13:
+    ``"fp32"``/``"bf16"``/``"int8"``; ``None`` = operand dtypes as given)
+    and is capability-checked against the impl's registry entry.
     """
     kwargs = {"k_blk": k_blk, "interpret": interpret}
     if n_blk is not None:
@@ -98,6 +104,9 @@ def spmm(fmt: MEBCRS, b: jax.Array, impl: str = "blocked", k_blk: int = 8,
         kwargs["split_blk"] = split_blk
     if schedule is not None:
         kwargs["schedule"] = schedule
+    if precision is not None:
+        _dispatch.require("spmm", impl, precision=precision)
+        kwargs["precision"] = precision
     return _dispatch.dispatch("spmm", impl, fmt, b, **kwargs)
 
 
@@ -107,10 +116,47 @@ def spmm(fmt: MEBCRS, b: jax.Array, impl: str = "blocked", k_blk: int = 8,
 # ---------------------------------------------------------------------------
 
 
+def _precision_blocked(blocked: BlockedMEBCRS, b: jax.Array,
+                       precision: str | None):
+    """XLA-oracle precision transform mirroring the kernels' policy.
+
+    bf16 narrows both operands (the fp32-accumulating einsum is the
+    oracle for the Pallas bf16 path); int8 quantizes the values per
+    K-block and *dequantizes in fp32* — arithmetically the kernels'
+    ``scale · dot(q, b)`` with the scale folded in, so this is the
+    reference the tolerance ladder compares the in-VMEM-dequantizing
+    kernel against.  A format already carrying int8 values + scales is
+    dequantized regardless of ``precision`` (auto-detect, as in the
+    kernels)."""
+    from .quantize import (dequantize_block_values, quantize_block_values,
+                           validate_precision)
+
+    validate_precision(precision)
+    vals = blocked.vals
+    if blocked.scales is not None and vals.dtype == jnp.int8:
+        vals = dequantize_block_values(vals, blocked.scales)
+    elif precision == "int8":
+        q, scales = quantize_block_values(vals, blocked.k_blk)
+        vals = dequantize_block_values(q, scales)
+    if precision in ("bf16", "int8"):
+        b = b.astype(jnp.bfloat16)
+        if precision == "bf16":
+            vals = vals.astype(jnp.bfloat16)
+    elif precision == "fp32":
+        vals = vals.astype(jnp.float32)
+        b = b.astype(jnp.float32)
+    if vals is not blocked.vals:
+        blocked = dataclasses.replace(blocked, vals=vals, scales=None)
+    return blocked, b
+
+
 def _spmm_blocked_adapter(fmt, b, *, k_blk: int = 8, n_blk: int | None = None,
-                          interpret: bool | None = None):
+                          interpret: bool | None = None,
+                          precision: str | None = None):
     del n_blk, interpret  # XLA path: no column tiling / interpret mode
-    return spmm_blocked(fmt, b, k_blk=k_blk)
+    blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
+    blocked, b = _precision_blocked(blocked, b, precision)
+    return _spmm_blocked_impl(blocked, b, blocked.shape[0])
 
 
 def _spmm_coo_adapter(fmt, b, *, k_blk: int = 8, n_blk: int | None = None,
@@ -124,5 +170,6 @@ def _spmm_coo_adapter(fmt, b, *, k_blk: int = 8, n_blk: int | None = None,
 
 
 _dispatch.register("spmm", "blocked", _spmm_blocked_adapter,
-                   differentiable=True, batched=True)
+                   differentiable=True, batched=True,
+                   precisions=("fp32", "bf16", "int8"))
 _dispatch.register("spmm", "coo_segment", _spmm_coo_adapter)

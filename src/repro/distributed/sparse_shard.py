@@ -378,7 +378,8 @@ def spmm_sharded(fmt, b: jax.Array, *, mesh: Optional[Mesh] = None,
                  part: Optional[ShardedSchedule] = None,
                  schedule: Optional[Schedule] = None, split_blk: int = 1,
                  k_blk: int = 8, n_blk: int = 128,
-                 interpret: Optional[bool] = None) -> jax.Array:
+                 interpret: Optional[bool] = None,
+                 precision: Optional[str] = None) -> jax.Array:
     """Multi-device SpMM: one local balanced launch per device + psum.
 
     ``fmt``: canonical :class:`~repro.core.format.MEBCRS` or
@@ -390,9 +391,12 @@ def spmm_sharded(fmt, b: jax.Array, *, mesh: Optional[Mesh] = None,
     output is replicated over ``"data"`` (the psum *is* the row
     all-gather a GNN layer needs before the next aggregation).  Exact
     fp32 parity with the single-device ``pallas_balanced`` path, up to
-    summation grouping on windows split across devices.
+    summation grouping on windows split across devices.  ``precision``
+    follows the kernel-wide policy (DESIGN.md §13): ``"bf16"`` narrows
+    the operands before the shard_map, ``"int8"`` quantizes the sparse
+    values per K-block (scales replicate — a few bytes per block).
     """
-    from repro.kernels.spmm_pallas import _balanced_spmm_call
+    from repro.kernels.spmm_pallas import _apply_precision, _balanced_spmm_call
 
     blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
     mesh = _resolve_mesh(mesh)
@@ -403,7 +407,7 @@ def spmm_sharded(fmt, b: jax.Array, *, mesh: Optional[Mesh] = None,
     _check_part(part, mesh)
     interpret = _interp(interpret)
 
-    vals = blocked.vals
+    vals, scales, quantized, b = _apply_precision(blocked, b, precision)
     vb, bb = vals.ndim == 3, b.ndim == 3
     h = vals.shape[0] if vb else (b.shape[0] if bb else 1)
     m, _ = blocked.shape
@@ -428,10 +432,10 @@ def spmm_sharded(fmt, b: jax.Array, *, mesh: Optional[Mesh] = None,
         if n_pad != n_loc:
             b3 = jnp.pad(b3, ((0, 0), (0, 0), (0, n_pad - n_loc)))
         out = _balanced_spmm_call(
-            sw, sm, blocked.cols, vals3, b3, num_windows=w + 1, v=v,
+            sw, sm, blocked.cols, scales, vals3, b3, num_windows=w + 1, v=v,
             k_blk=blocked.k_blk, n_blk=nb_eff, h=vals3.shape[0] if vb
             else (b3.shape[0] if bb else 1), vals_batched=vb, b_batched=bb,
-            interpret=interpret)
+            interpret=interpret, quantized=quantized)
         out = out[:, :m, :n_loc]
         out = jnp.where(own[None, :, None], out, 0.0)   # NaN-safe zero fill
         out = jax.lax.psum(out, "data")
@@ -455,7 +459,8 @@ def sddmm_sharded(fmt, q: jax.Array, k: jax.Array, *,
                   part: Optional[ShardedSchedule] = None,
                   schedule: Optional[Schedule] = None, split_blk: int = 1,
                   k_blk: int = 8, f_blk: int = 128,
-                  interpret: Optional[bool] = None) -> jax.Array:
+                  interpret: Optional[bool] = None,
+                  precision: Optional[str] = None) -> jax.Array:
     """Multi-device SDDMM → blocked-layout values ``(NNZP, V)``.
 
     K-blocks are uniquely owned by segments, so the block-indirect grid
@@ -467,8 +472,9 @@ def sddmm_sharded(fmt, q: jax.Array, k: jax.Array, *,
     the partial products (TP-style).  Degrades to replication when the
     dim does not divide.
     """
-    from repro.kernels.sddmm_pallas import _balanced_sddmm_call
+    from repro.kernels.sddmm_pallas import _balanced_sddmm_call, _cast_precision
 
+    q, k = _cast_precision(precision, q, k)
     blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
     mesh = _resolve_mesh(mesh)
     if part is None:
@@ -532,7 +538,8 @@ def attention_sharded(fmt, q: jax.Array, k: jax.Array, v: jax.Array, *,
                       part: Optional[ShardedSchedule] = None,
                       schedule: Optional[Schedule] = None,
                       split_blk: int = 1, k_blk: int = 8, scale=None,
-                      interpret: Optional[bool] = None) -> jax.Array:
+                      interpret: Optional[bool] = None,
+                      precision: Optional[str] = None) -> jax.Array:
     """Multi-device single-pass fused sparse attention.
 
     Row windows partition over ``"data"`` on a **window-aligned**
@@ -548,7 +555,9 @@ def attention_sharded(fmt, q: jax.Array, k: jax.Array, v: jax.Array, *,
     import math
 
     from repro.kernels.attention_pallas import _balanced_attn_call
+    from repro.kernels.sddmm_pallas import _cast_precision
 
+    q, k, v = _cast_precision(precision, q, k, v)
     blocked = fmt if isinstance(fmt, BlockedMEBCRS) else block_format(fmt, k_blk)
     mesh = _resolve_mesh(mesh)
     if part is None:
@@ -611,34 +620,35 @@ def attention_sharded(fmt, q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def _spmm_sharded_adapter(fmt, b, *, k_blk=8, n_blk=128, split_blk=1,
                           schedule=None, mesh=None, part=None,
-                          interpret=None):
+                          interpret=None, precision=None):
     return spmm_sharded(fmt, b, mesh=mesh, part=part, schedule=schedule,
                         split_blk=split_blk, k_blk=k_blk, n_blk=n_blk,
-                        interpret=interpret)
+                        interpret=interpret, precision=precision)
 
 
 def _sddmm_sharded_adapter(fmt, q, k, *, k_blk=8, f_blk=128, split_blk=1,
                            schedule=None, mesh=None, part=None,
-                           interpret=None):
+                           interpret=None, precision=None):
     return sddmm_sharded(fmt, q, k, mesh=mesh, part=part, schedule=schedule,
                          split_blk=split_blk, k_blk=k_blk, f_blk=f_blk,
-                         interpret=interpret)
+                         interpret=interpret, precision=precision)
 
 
 def _attention_sharded_adapter(fmt, q, k, v, *, scale=None, k_blk=8,
                                split_blk=1, schedule=None, mesh=None,
-                               part=None, interpret=None):
+                               part=None, interpret=None, precision=None):
     return attention_sharded(fmt, q, k, v, mesh=mesh, part=part,
                              schedule=schedule, split_blk=split_blk,
-                             k_blk=k_blk, scale=scale, interpret=interpret)
+                             k_blk=k_blk, scale=scale, interpret=interpret,
+                             precision=precision)
 
 
 _dispatch.register("spmm", "pallas_sharded", _spmm_sharded_adapter,
                    differentiable=True, batched=True, load_balanced=True,
-                   multi_device=True)
+                   multi_device=True, precisions=("fp32", "bf16", "int8"))
 _dispatch.register("sddmm", "pallas_sharded", _sddmm_sharded_adapter,
                    differentiable=True, batched=True, load_balanced=True,
-                   multi_device=True)
+                   multi_device=True, precisions=("fp32", "bf16"))
 _dispatch.register("attention", "pallas_sharded", _attention_sharded_adapter,
                    differentiable=True, batched=True, load_balanced=True,
-                   multi_device=True)
+                   multi_device=True, precisions=("fp32", "bf16"))

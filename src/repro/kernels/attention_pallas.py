@@ -43,6 +43,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .sddmm_pallas import _cast_precision
+
 __all__ = [
     "attention_pallas",
     "attention_pallas_balanced",
@@ -180,7 +182,8 @@ def _fused_attn_call(win_ptr, cols, q3, k3, v3, maskf, *, num_windows, v,
 
 
 def attention_pallas(blocked, q: jax.Array, k: jax.Array, v: jax.Array, *,
-                     scale=None, interpret: bool = True) -> jax.Array:
+                     scale=None, interpret: bool = True,
+                     precision: str | None = None) -> jax.Array:
     """Single-pass fused sparse attention over a :class:`BlockedMEBCRS`.
 
     ``q (M, D)``, ``k (Mc, D)``, ``v (Mc, DV)`` — each optionally with a
@@ -188,8 +191,11 @@ def attention_pallas(blocked, q: jax.Array, k: jax.Array, v: jax.Array, *,
     **one** ``(H, W)`` grid launch.  ``scale`` defaults to ``1/sqrt(D)``
     and may be a traced scalar (it is folded into Q before the kernel —
     the scores themselves never exist outside VMEM).  Returns ``(M, DV)``
-    or ``(H, M, DV)`` in ``v`` dtype.
+    or ``(H, M, DV)`` in ``v`` dtype.  ``precision`` ("fp32"/"bf16") casts
+    Q/K/V before the launch; the online-softmax statistics and the output
+    accumulator stay fp32 in VMEM either way (DESIGN.md §13).
     """
+    q, k, v = _cast_precision(precision, q, k, v)
     vsz = blocked.vector_size
     w = blocked.num_windows
     m, _ = blocked.shape
@@ -370,7 +376,8 @@ def _balanced_attn_call(seg_win, seg_meta, cols, q3, k3, v3, maskf, *,
 def attention_pallas_balanced(blocked, q: jax.Array, k: jax.Array,
                               v: jax.Array, *, schedule=None,
                               split_blk: int = 1, scale=None,
-                              interpret: bool = True) -> jax.Array:
+                              interpret: bool = True,
+                              precision: str | None = None) -> jax.Array:
     """Load-balanced single-pass fused sparse attention.
 
     Same contract as :func:`attention_pallas` — per-head or shared
@@ -382,6 +389,7 @@ def attention_pallas_balanced(blocked, q: jax.Array, k: jax.Array,
     """
     if schedule is None:
         schedule = blocked.schedule(split_blk)
+    q, k, v = _cast_precision(precision, q, k, v)
     vsz = blocked.vector_size
     w = blocked.num_windows
     m, _ = blocked.shape
@@ -410,14 +418,16 @@ def attention_pallas_balanced(blocked, q: jax.Array, k: jax.Array,
 
 def attention_pallas_staged(blocked, q: jax.Array, k: jax.Array,
                             v: jax.Array, *, scale=None, n_blk: int = 128,
-                            f_blk: int = 128,
-                            interpret: bool = True) -> jax.Array:
+                            f_blk: int = 128, interpret: bool = True,
+                            precision: str | None = None) -> jax.Array:
     """3-dispatch baseline: SDDMM kernel → XLA sparse softmax → SpMM kernel.
 
     The (NNZP, V) score tensor is written to HBM by the SDDMM, re-read and
     re-written by the softmax, and re-read by the SpMM — the traffic the
     fused kernel eliminates.  Batched operands use the batched kernels, so
     fused-vs-staged comparisons isolate the *fusion* win, not batching.
+    ``precision`` casts Q/K/V up front; the sparse softmax itself runs fp32
+    on the scores and the probabilities ride at ``v``'s (cast) dtype.
     """
     from repro.core.sddmm import with_values
     from repro.core.softmax import sparse_softmax
@@ -425,11 +435,12 @@ def attention_pallas_staged(blocked, q: jax.Array, k: jax.Array,
     from .sddmm_pallas import sddmm_pallas_batched
     from .spmm_pallas import spmm_pallas_batched
 
+    q, k, v = _cast_precision(precision, q, k, v)
     if scale is None:
         scale = 1.0 / math.sqrt(q.shape[-1])
     scores = sddmm_pallas_batched(blocked, q, k, f_blk=f_blk,
                                   interpret=interpret)
-    probs = sparse_softmax(blocked, scores * scale)
+    probs = sparse_softmax(blocked, scores.astype(jnp.float32) * scale)
     return spmm_pallas_batched(with_values(blocked, probs.astype(v.dtype)),
                                v, n_blk=n_blk, interpret=interpret)
 
@@ -472,8 +483,10 @@ def attention_hbm_bytes(blocked, d: int, dv: int, *, h: int = 1,
     if impl == "staged":
         score_bytes = nnzp * v * 4                # fp32 (NNZP, V) in HBM
         softmax_pass = 2 * score_bytes + nnzp * v  # read + write + bool mask
-        per_head = (sddmm_hbm_bytes(blocked, d, f_blk=d, impl="fused")
+        per_head = (sddmm_hbm_bytes(blocked, d, f_blk=d, impl="fused",
+                                    value_bytes=value_bytes)
                     + softmax_pass
-                    + spmm_hbm_bytes(blocked, dv, n_blk=dv, impl="fused"))
+                    + spmm_hbm_bytes(blocked, dv, n_blk=dv, impl="fused",
+                                     value_bytes=value_bytes))
         return h * per_head
     raise ValueError(f"unknown impl {impl!r}")

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import time
 from typing import Dict, Optional, Sequence, Tuple
@@ -30,6 +31,8 @@ import jax
 import numpy as np
 
 from repro.core.format import MEBCRS, block_format, window_skew
+
+logger = logging.getLogger(__name__)
 
 __all__ = [
     "TuneConfig",
@@ -61,7 +64,11 @@ _DEFAULT_CACHE_PATH = os.path.join(
 # winners tuned without the skew dimension must not satisfy skew-aware
 # lookups, so files with any other/missing schema (v1 and v2 alike) are
 # discarded wholesale.
-SCHEMA_VERSION = 3
+# v4: configs gained ``precision`` (the mixed-precision level the winner
+# was timed at, DESIGN.md §13) and the sweep key a ``|p...`` candidate
+# suffix — a v3 winner carries no precision and must not satisfy a
+# precision-swept lookup, so v3 files (and older) are discarded wholesale.
+SCHEMA_VERSION = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,13 +77,16 @@ class TuneConfig:
 
     ``split_blk = 0`` runs the window-parallel fused kernel; ``>= 1`` runs
     the block-parallel balanced kernel with that many K-blocks per segment
-    (DESIGN.md §11).
+    (DESIGN.md §11).  ``precision`` is the mixed-precision level the
+    winner was timed at (DESIGN.md §13); ``"fp32"`` — the default when the
+    sweep has no precision axis — means the operands' native dtypes.
     """
 
     k_blk: int
     n_blk: int
     median_ms: float
     split_blk: int = 0
+    precision: str = "fp32"
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
@@ -85,7 +95,8 @@ class TuneConfig:
     def from_json(cls, d: Dict) -> "TuneConfig":
         return cls(k_blk=int(d["k_blk"]), n_blk=int(d["n_blk"]),
                    median_ms=float(d["median_ms"]),
-                   split_blk=int(d.get("split_blk", 0)))
+                   split_blk=int(d.get("split_blk", 0)),
+                   precision=str(d.get("precision", "fp32")))
 
 
 def _log2_bucket(x: float) -> int:
@@ -149,6 +160,14 @@ class AutotuneCache:
                         and raw.get("schema") == SCHEMA_VERSION):
                     self._data = raw.get("configs", {})
                 else:
+                    # Warn once per cache object — _load memoizes, so
+                    # per-lookup calls never re-log the discard.
+                    found = (raw.get("schema", "none (v1 layout)")
+                             if isinstance(raw, dict) else "none (v1 layout)")
+                    logger.warning(
+                        "discarding autotune cache %s: schema %s != %d "
+                        "(stale bucketing; re-tuning from scratch)",
+                        self.path, found, SCHEMA_VERSION)
                     self._data = {}
             except (OSError, ValueError):
                 self._data = {}
@@ -192,15 +211,20 @@ def _median_ms(fn, reps: int, warmup: int = 1) -> float:
 
 def _sweep(fmt: MEBCRS, run_cfg, minor: int, key: str, *,
            k_blks: Sequence[int], n_blks: Sequence[int],
-           split_blks: Sequence[int], reps: int,
+           split_blks: Sequence[int], precisions: Sequence[str], reps: int,
            cache: Optional[AutotuneCache]) -> TuneConfig:
+    from repro.core.quantize import validate_precision
+
+    for prec in precisions:
+        validate_precision(prec)
     cache = cache if cache is not None else default_cache()
     # The candidate grid is part of the key: a sweep over (8, 16) must not
     # satisfy a later request for (32,) — the winner would be a config the
-    # caller explicitly excluded.
+    # caller explicitly excluded.  Ditto the precision candidates (v4).
     key = (f"{key}|k{','.join(map(str, sorted(k_blks)))}"
            f"|nb{','.join(map(str, sorted(n_blks)))}"
-           f"|s{','.join(map(str, sorted(split_blks)))}")
+           f"|s{','.join(map(str, sorted(split_blks)))}"
+           f"|p{','.join(sorted(precisions))}")
     hit = cache.get(key)
     if hit is not None:
         return hit
@@ -209,17 +233,19 @@ def _sweep(fmt: MEBCRS, run_cfg, minor: int, key: str, *,
     for k_blk in k_blks:
         blocked = block_format(fmt, k_blk)
         for split in split_blks:
-            seen = set()
-            for n_blk in n_blks:
-                eff = min(n_blk, max(minor, 1))
-                if eff in seen:
-                    continue
-                seen.add(eff)
-                ms = _median_ms(lambda: run_cfg(blocked, eff, split),
-                                reps=reps)
-                if best is None or ms < best.median_ms:
-                    best = TuneConfig(k_blk=k_blk, n_blk=eff, median_ms=ms,
-                                      split_blk=split)
+            for prec in precisions:
+                seen = set()
+                for n_blk in n_blks:
+                    eff = min(n_blk, max(minor, 1))
+                    if eff in seen:
+                        continue
+                    seen.add(eff)
+                    ms = _median_ms(
+                        lambda: run_cfg(blocked, eff, split, prec), reps=reps)
+                    if best is None or ms < best.median_ms:
+                        best = TuneConfig(k_blk=k_blk, n_blk=eff,
+                                          median_ms=ms, split_blk=split,
+                                          precision=prec)
     assert best is not None
     cache.put(key, best)
     return best
@@ -229,6 +255,7 @@ def tune_spmm(fmt: MEBCRS, b_dense: jax.Array, *,
               k_blks: Sequence[int] = DEFAULT_K_BLKS,
               n_blks: Sequence[int] = DEFAULT_N_BLKS,
               split_blks: Sequence[int] = DEFAULT_SPLIT_BLKS,
+              precisions: Sequence[str] = ("fp32",),
               interpret: bool = True, reps: int = 3,
               cache: Optional[AutotuneCache] = None) -> TuneConfig:
     """Pick (k_blk, n_blk, split_blk) for SpMM on this matrix class.
@@ -241,6 +268,10 @@ def tune_spmm(fmt: MEBCRS, b_dense: jax.Array, *,
     ``(H, ...)`` grids on the full batch (one launch per candidate, the
     path batched callers actually run), and the batch size is part of the
     cache bucket so batched and unbatched shapes tune independently.
+    ``precisions`` adds the dtype axis (DESIGN.md §13): each candidate is
+    timed at each level and the winner's level rides in
+    ``TuneConfig.precision`` (``"fp32"`` candidates run the operands'
+    native dtypes, so a no-axis sweep behaves exactly as before v4).
     """
     from .spmm_pallas import (
         spmm_pallas,
@@ -250,22 +281,24 @@ def tune_spmm(fmt: MEBCRS, b_dense: jax.Array, *,
 
     batch = b_dense.shape[0] if b_dense.ndim == 3 else 1
 
-    def run(blocked, n_blk, split):
+    def run(blocked, n_blk, split, prec):
+        prec = None if prec == "fp32" else prec   # fp32 = native dtypes
         if split:
             return spmm_pallas_balanced(blocked, b_dense, split_blk=split,
-                                        n_blk=n_blk, interpret=interpret)
+                                        n_blk=n_blk, interpret=interpret,
+                                        precision=prec)
         if b_dense.ndim == 3:
             return spmm_pallas_batched(blocked, b_dense, n_blk=n_blk,
-                                       interpret=interpret)
+                                       interpret=interpret, precision=prec)
         return spmm_pallas(blocked, b_dense, n_blk=n_blk,
-                           interpret=interpret)
+                           interpret=interpret, precision=prec)
 
     n = b_dense.shape[-1]
     key = matrix_stats_key(fmt, n, "spmm", interpret=interpret,
                            dtype=b_dense.dtype, batch=batch)
     return _sweep(
         fmt, run, n, key, k_blks=k_blks, n_blks=n_blks,
-        split_blks=split_blks, reps=reps, cache=cache,
+        split_blks=split_blks, precisions=precisions, reps=reps, cache=cache,
     )
 
 
@@ -273,6 +306,7 @@ def tune_sddmm(fmt: MEBCRS, q: jax.Array, k: jax.Array, *,
                k_blks: Sequence[int] = DEFAULT_K_BLKS,
                f_blks: Sequence[int] = DEFAULT_N_BLKS,
                split_blks: Sequence[int] = (0,),
+               precisions: Sequence[str] = ("fp32",),
                interpret: bool = True, reps: int = 3,
                cache: Optional[AutotuneCache] = None) -> TuneConfig:
     """Pick (k_blk, f_blk) for :func:`sddmm_pallas` on this matrix class.
@@ -292,27 +326,31 @@ def tune_sddmm(fmt: MEBCRS, q: jax.Array, k: jax.Array, *,
 
     batch = next((x.shape[0] for x in (q, k) if x.ndim == 3), 1)
 
-    def run(blocked, f_blk, split):
+    def run(blocked, f_blk, split, prec):
+        prec = None if prec == "fp32" else prec
         if split:
             return sddmm_pallas_balanced(blocked, q, k, split_blk=split,
-                                         f_blk=f_blk, interpret=interpret)
+                                         f_blk=f_blk, interpret=interpret,
+                                         precision=prec)
         if q.ndim == 3 or k.ndim == 3:
             return sddmm_pallas_batched(blocked, q, k, f_blk=f_blk,
-                                        interpret=interpret)
-        return sddmm_pallas(blocked, q, k, f_blk=f_blk, interpret=interpret)
+                                        interpret=interpret, precision=prec)
+        return sddmm_pallas(blocked, q, k, f_blk=f_blk, interpret=interpret,
+                            precision=prec)
 
     f = q.shape[-1]
     key = matrix_stats_key(fmt, f, "sddmm", interpret=interpret,
                            dtype=q.dtype, batch=batch)
     return _sweep(
         fmt, run, f, key, k_blks=k_blks, n_blks=f_blks,
-        split_blks=split_blks, reps=reps, cache=cache,
+        split_blks=split_blks, precisions=precisions, reps=reps, cache=cache,
     )
 
 
 def tune_attention(fmt: MEBCRS, q: jax.Array, k: jax.Array, v: jax.Array, *,
                    k_blks: Sequence[int] = DEFAULT_K_BLKS,
                    split_blks: Sequence[int] = DEFAULT_SPLIT_BLKS,
+                   precisions: Sequence[str] = ("fp32",),
                    interpret: bool = True, reps: int = 3,
                    cache: Optional[AutotuneCache] = None) -> TuneConfig:
     """Pick ``(k_blk, split_blk)`` for the fused sparse-attention kernel.
@@ -333,14 +371,17 @@ def tune_attention(fmt: MEBCRS, q: jax.Array, k: jax.Array, v: jax.Array, *,
     key = matrix_stats_key(fmt, d, "attn", interpret=interpret,
                            dtype=q.dtype, batch=batch)
 
-    def run(blocked, _dv, split):
+    def run(blocked, _dv, split, prec):
+        prec = None if prec == "fp32" else prec
         if split:
             return attention_pallas_balanced(blocked, q, k, v,
                                              split_blk=split,
-                                             interpret=interpret)
-        return attention_pallas(blocked, q, k, v, interpret=interpret)
+                                             interpret=interpret,
+                                             precision=prec)
+        return attention_pallas(blocked, q, k, v, interpret=interpret,
+                                precision=prec)
 
     return _sweep(
         fmt, run, dv, key, k_blks=k_blks, n_blks=(dv,),
-        split_blks=split_blks, reps=reps, cache=cache,
+        split_blks=split_blks, precisions=precisions, reps=reps, cache=cache,
     )

@@ -35,6 +35,17 @@ __all__ = [
 ]
 
 
+def _cast_precision(precision, *operands):
+    """Apply the SDDMM/attention precision policy (DESIGN.md §13): cast the
+    dense operands to the target dtype so they DMA narrow; the in-kernel
+    accumulator stays fp32 regardless.  ``int8`` is not offered here — the
+    sampled-QKᵀ operands are dense rows with no per-block scale to attach
+    (int8 lives on the SpMM value side)."""
+    from repro.core.quantize import cast_precision
+
+    return cast_precision(precision, *operands)
+
+
 def _fused_sddmm_kernel(block_win_ref, cols_ref, q_ref, k_hbm, mask_ref,
                         o_ref, acc_ref, k_buf, sems, *,
                         k_blk: int, f_blk: int, nf: int):
@@ -121,13 +132,17 @@ def _fused_sddmm_call(block_win, cols, qpad, k_dense, mask, *, v, k_blk,
 
 
 def sddmm_pallas(blocked, q: jax.Array, k: jax.Array, *, f_blk: int = 128,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool = True,
+                 precision: str | None = None) -> jax.Array:
     """Gather-free SDDMM over a :class:`BlockedMEBCRS` pattern.
 
     Returns blocked-layout values ``(NB * K_BLK, V)`` in ``q`` dtype,
     directly consumable by :func:`repro.core.sddmm.with_values` + SpMM.
     K's sampled rows are DMA'd in-kernel; no staged gather of K remains.
+    ``precision`` ("fp32"/"bf16") casts Q and K before the launch so they
+    DMA narrow; accumulation stays fp32 in-kernel.
     """
+    q, k = _cast_precision(precision, q, k)
     v = blocked.vector_size
     w = blocked.num_windows
     f = q.shape[1]
@@ -246,7 +261,8 @@ def _batched_sddmm_call(block_win, cols, q3, k3, mask, *, v, k_blk, f_blk,
 
 def sddmm_pallas_batched(blocked, q: jax.Array, k: jax.Array, *,
                          f_blk: int = 128,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool = True,
+                         precision: str | None = None) -> jax.Array:
     """Batched gather-free SDDMM: one ``(H, NB, F/F_BLK)`` grid for H heads.
 
     ``q``/``k`` may be ``(M, F)``/``(Mc, F)`` shared or carry a leading
@@ -256,7 +272,9 @@ def sddmm_pallas_batched(blocked, q: jax.Array, k: jax.Array, *,
     """
     qb, kb = q.ndim == 3, k.ndim == 3
     if not (qb or kb):
-        return sddmm_pallas(blocked, q, k, f_blk=f_blk, interpret=interpret)
+        return sddmm_pallas(blocked, q, k, f_blk=f_blk, interpret=interpret,
+                            precision=precision)
+    q, k = _cast_precision(precision, q, k)
     h = q.shape[0] if qb else k.shape[0]
     v = blocked.vector_size
     w = blocked.num_windows
@@ -388,7 +406,8 @@ def _balanced_sddmm_call(blk_id, blk_win, cols, q3, k3, mask, *, v, k_blk,
 def sddmm_pallas_balanced(blocked, q: jax.Array, k: jax.Array, *,
                           schedule=None, split_blk: int = 1,
                           f_blk: int = 128,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: bool = True,
+                          precision: str | None = None) -> jax.Array:
     """Schedule-driven SDDMM over a :class:`BlockedMEBCRS` pattern.
 
     ``schedule`` is the precomputed :class:`~repro.core.format.Schedule`
@@ -401,6 +420,7 @@ def sddmm_pallas_balanced(blocked, q: jax.Array, k: jax.Array, *,
     """
     if schedule is None:
         schedule = blocked.schedule(split_blk)
+    q, k = _cast_precision(precision, q, k)
     qb, kb = q.ndim == 3, k.ndim == 3
     h = q.shape[0] if qb else (k.shape[0] if kb else 1)
     v = blocked.vector_size

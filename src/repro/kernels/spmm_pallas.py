@@ -56,13 +56,61 @@ __all__ = [
 
 
 # ---------------------------------------------------------------------------
+# Precision policy (DESIGN.md §13).  Shared by every SpMM wrapper below:
+# resolve the (vals, scales, quantized, B) quadruple a kernel launch needs.
+# ---------------------------------------------------------------------------
+
+
+def _apply_precision(blocked, b_dense, precision):
+    """Apply the precision policy to one SpMM launch.
+
+    Returns ``(vals, scales, quantized, b_dense)``:
+
+      * ``precision=None`` — operands as given; a format carrying int8
+        values + per-block ``scales`` selects the quantized kernel path.
+      * ``"fp32"`` / ``"bf16"`` — cast the dense operand (and float
+        values) to the target dtype; the in-kernel accumulator is fp32
+        either way, only the DMA'd bytes narrow.
+      * ``"int8"`` — quantize the values per K-block **in trace**
+        (:func:`repro.core.quantize.quantize_block_values`) unless the
+        format is already quantized; the dense operand rides at bf16.
+
+    ``scales`` is always a concrete ``(NB,)`` fp32 array (ones when not
+    quantized) so every kernel shares one scalar-prefetch signature; the
+    static ``quantized`` flag gates the per-block multiply, keeping the
+    unquantized path's arithmetic untouched (bitwise-identical).
+    """
+    from repro.core.quantize import quantize_block_values, validate_precision
+
+    validate_precision(precision)
+    vals = blocked.vals
+    scales = getattr(blocked, "scales", None)
+    quantized = scales is not None and vals.dtype == jnp.int8
+    if precision == "int8" and not quantized:
+        vals, scales = quantize_block_values(vals, blocked.k_blk)
+        quantized = True
+    if precision in ("bf16", "int8"):
+        b_dense = b_dense.astype(jnp.bfloat16)
+        if not quantized:
+            vals = vals.astype(jnp.bfloat16)
+    elif precision == "fp32":
+        b_dense = b_dense.astype(jnp.float32)
+        if not quantized:
+            vals = vals.astype(jnp.float32)
+    if scales is None:
+        scales = jnp.ones((blocked.num_blocks,), jnp.float32)
+    return vals, jnp.asarray(scales, jnp.float32), quantized, b_dense
+
+
+# ---------------------------------------------------------------------------
 # Fused gather-free kernel (default path)
 # ---------------------------------------------------------------------------
 
 
-def _fused_spmm_kernel(win_ptr_ref, cols_ref, vals_hbm, b_hbm, o_ref,
-                       acc_ref, vals_buf, b_buf, sems, *,
-                       k_blk: int, n_blk: int, double_buffer: bool):
+def _fused_spmm_kernel(win_ptr_ref, cols_ref, scales_ref, vals_hbm, b_hbm,
+                       o_ref, acc_ref, vals_buf, b_buf, sems, *,
+                       k_blk: int, n_blk: int, double_buffer: bool,
+                       quantized: bool):
     j = pl.program_id(0)
     w = pl.program_id(1)
     lo = win_ptr_ref[w]
@@ -91,14 +139,20 @@ def _fused_spmm_kernel(win_ptr_ref, cols_ref, vals_hbm, b_hbm, o_ref,
 
     acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    def accumulate(slot):
+    def accumulate(blk, slot):
         # contraction over the K_BLK vector index: (V, N_BLK) += valsᵀ @ brows
-        acc_ref[...] += jax.lax.dot_general(
+        contrib = jax.lax.dot_general(
             vals_buf[slot].astype(jnp.float32),
             b_buf[slot].astype(jnp.float32),
             dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
+        if quantized:
+            # In-VMEM dequantization: the per-block scale commutes with the
+            # contraction, so one fp32 multiply restores the magnitude of a
+            # whole int8 K-block tile (DESIGN.md §13).
+            contrib = contrib * scales_ref[blk]
+        acc_ref[...] += contrib
 
     if double_buffer:
         @pl.when(lo < hi)
@@ -116,7 +170,7 @@ def _fused_spmm_kernel(win_ptr_ref, cols_ref, vals_hbm, b_hbm, o_ref,
 
             for cp in block_copies(blk, slot):
                 cp.wait()
-            accumulate(slot)
+            accumulate(blk, slot)
             return carry
     else:
         # Serialized variant (the "non-coalesced" ablation): each dense row
@@ -127,7 +181,7 @@ def _fused_spmm_kernel(win_ptr_ref, cols_ref, vals_hbm, b_hbm, o_ref,
             for cp in block_copies(blk, 0):
                 cp.start()
                 cp.wait()
-            accumulate(0)
+            accumulate(blk, 0)
             return carry
 
     jax.lax.fori_loop(lo, hi, body, 0)
@@ -139,21 +193,22 @@ def _fused_spmm_kernel(win_ptr_ref, cols_ref, vals_hbm, b_hbm, o_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("num_windows", "v", "k_blk", "n_blk", "interpret",
-                     "double_buffer"),
+                     "double_buffer", "quantized"),
 )
-def _fused_spmm_call(win_ptr, cols, vals, b_dense, *, num_windows, v, k_blk,
-                     n_blk, interpret, double_buffer):
+def _fused_spmm_call(win_ptr, cols, scales, vals, b_dense, *, num_windows, v,
+                     k_blk, n_blk, interpret, double_buffer,
+                     quantized=False):
     n_pad = b_dense.shape[1]
     grid = (n_pad // n_blk, num_windows)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),  # vals stay in HBM
             pl.BlockSpec(memory_space=pltpu.ANY),  # B stays in HBM
         ],
-        out_specs=pl.BlockSpec((v, n_blk), lambda j, w, wp, c: (w, j)),
+        out_specs=pl.BlockSpec((v, n_blk), lambda j, w, wp, c, sc: (w, j)),
         scratch_shapes=[
             pltpu.VMEM((v, n_blk), jnp.float32),          # fp32 accumulator
             pltpu.VMEM((2, k_blk, v), vals.dtype),        # vals double-buffer
@@ -163,7 +218,7 @@ def _fused_spmm_call(win_ptr, cols, vals, b_dense, *, num_windows, v, k_blk,
     )
     kernel = functools.partial(
         _fused_spmm_kernel, k_blk=k_blk, n_blk=n_blk,
-        double_buffer=double_buffer,
+        double_buffer=double_buffer, quantized=quantized,
     )
     out_shape = jax.ShapeDtypeStruct((num_windows * v, n_pad), b_dense.dtype)
     return pl.pallas_call(
@@ -171,7 +226,7 @@ def _fused_spmm_call(win_ptr, cols, vals, b_dense, *, num_windows, v, k_blk,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(win_ptr, cols, vals, b_dense)
+    )(win_ptr, cols, scales, vals, b_dense)
 
 
 def _pad_cols(b_dense: jax.Array, n_blk: int):
@@ -184,33 +239,43 @@ def _pad_cols(b_dense: jax.Array, n_blk: int):
 
 
 def _spmm_fused(blocked, b_dense: jax.Array, n_blk: int, interpret: bool,
-                double_buffer: bool) -> jax.Array:
+                double_buffer: bool, precision=None) -> jax.Array:
     m, _ = blocked.shape
     n = b_dense.shape[1]
+    vals, scales, quantized, b_dense = _apply_precision(
+        blocked, b_dense, precision)
     b_padded, n_blk = _pad_cols(b_dense, n_blk)
     out = _fused_spmm_call(
-        blocked.win_ptr, blocked.cols, blocked.vals, b_padded,
+        blocked.win_ptr, blocked.cols, scales, vals, b_padded,
         num_windows=blocked.num_windows, v=blocked.vector_size,
         k_blk=blocked.k_blk, n_blk=n_blk, interpret=interpret,
-        double_buffer=double_buffer,
+        double_buffer=double_buffer, quantized=quantized,
     )
     return out[:m, :n]
 
 
 def spmm_pallas(blocked, b_dense: jax.Array, *, n_blk: int = 128,
-                interpret: bool = True) -> jax.Array:
+                interpret: bool = True, precision: str | None = None
+                ) -> jax.Array:
     """Gather-free SpMM over a :class:`BlockedMEBCRS`. Returns (M, N) in
     ``b`` dtype.  Dense rows are DMA'd HBM→VMEM inside the kernel
-    (double-buffered); no staging buffer is materialized."""
-    return _spmm_fused(blocked, b_dense, n_blk, interpret, double_buffer=True)
+    (double-buffered); no staging buffer is materialized.  ``precision``
+    selects the mixed-precision path (DESIGN.md §13): ``"bf16"`` narrows
+    the DMA'd operands with fp32 in-kernel accumulation; ``"int8"``
+    additionally quantizes the values per K-block, dequantizing in-VMEM
+    via the scalar-prefetched scales."""
+    return _spmm_fused(blocked, b_dense, n_blk, interpret, double_buffer=True,
+                       precision=precision)
 
 
 def spmm_pallas_noncoalesced(blocked, b_dense: jax.Array, *, n_blk: int = 128,
-                             interpret: bool = True) -> jax.Array:
+                             interpret: bool = True,
+                             precision: str | None = None) -> jax.Array:
     """Ablation variant (paper Fig. 15): serialized per-row DMA with no
     double buffering.  Bitwise-identical results to :func:`spmm_pallas`
     (same accumulation order); only the copy scheduling differs."""
-    return _spmm_fused(blocked, b_dense, n_blk, interpret, double_buffer=False)
+    return _spmm_fused(blocked, b_dense, n_blk, interpret,
+                       double_buffer=False, precision=precision)
 
 
 # ---------------------------------------------------------------------------
@@ -226,10 +291,10 @@ def spmm_pallas_noncoalesced(blocked, b_dense: jax.Array, *, n_blk: int = 128,
 # ---------------------------------------------------------------------------
 
 
-def _batched_spmm_kernel(win_ptr_ref, cols_ref, vals_hbm, b_hbm, o_ref,
-                         acc_ref, vals_buf, b_buf, sems, *,
+def _batched_spmm_kernel(win_ptr_ref, cols_ref, scales_ref, vals_hbm, b_hbm,
+                         o_ref, acc_ref, vals_buf, b_buf, sems, *,
                          k_blk: int, n_blk: int, vals_batched: bool,
-                         b_batched: bool):
+                         b_batched: bool, quantized: bool):
     h = pl.program_id(0)
     j = pl.program_id(1)
     w = pl.program_id(2)
@@ -273,12 +338,15 @@ def _batched_spmm_kernel(win_ptr_ref, cols_ref, vals_hbm, b_hbm, o_ref,
 
         for cp in block_copies(blk, slot):
             cp.wait()
-        acc_ref[...] += jax.lax.dot_general(
+        contrib = jax.lax.dot_general(
             vals_buf[slot].astype(jnp.float32),
             b_buf[slot].astype(jnp.float32),
             dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
+        if quantized:
+            contrib = contrib * scales_ref[blk]
+        acc_ref[...] += contrib
         return carry
 
     jax.lax.fori_loop(lo, hi, body, 0)
@@ -288,22 +356,23 @@ def _batched_spmm_kernel(win_ptr_ref, cols_ref, vals_hbm, b_hbm, o_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("num_windows", "v", "k_blk", "n_blk", "h",
-                     "vals_batched", "b_batched", "interpret"),
+                     "vals_batched", "b_batched", "interpret", "quantized"),
 )
-def _batched_spmm_call(win_ptr, cols, vals3, b3, *, num_windows, v, k_blk,
-                       n_blk, h, vals_batched, b_batched, interpret):
+def _batched_spmm_call(win_ptr, cols, scales, vals3, b3, *, num_windows, v,
+                       k_blk, n_blk, h, vals_batched, b_batched, interpret,
+                       quantized=False):
     n_pad = b3.shape[-1]
     grid = (h, n_pad // n_blk, num_windows)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),  # vals stay in HBM
             pl.BlockSpec(memory_space=pltpu.ANY),  # B stays in HBM
         ],
         out_specs=pl.BlockSpec((1, v, n_blk),
-                               lambda hh, j, w, wp, c: (hh, w, j)),
+                               lambda hh, j, w, wp, c, sc: (hh, w, j)),
         scratch_shapes=[
             pltpu.VMEM((v, n_blk), jnp.float32),           # fp32 accumulator
             pltpu.VMEM((2, k_blk, v), vals3.dtype),        # vals double-buffer
@@ -313,7 +382,7 @@ def _batched_spmm_call(win_ptr, cols, vals3, b3, *, num_windows, v, k_blk,
     )
     kernel = functools.partial(
         _batched_spmm_kernel, k_blk=k_blk, n_blk=n_blk,
-        vals_batched=vals_batched, b_batched=b_batched,
+        vals_batched=vals_batched, b_batched=b_batched, quantized=quantized,
     )
     out_shape = jax.ShapeDtypeStruct((h, num_windows * v, n_pad), b3.dtype)
     return pl.pallas_call(
@@ -321,11 +390,12 @@ def _batched_spmm_call(win_ptr, cols, vals3, b3, *, num_windows, v, k_blk,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(win_ptr, cols, vals3, b3)
+    )(win_ptr, cols, scales, vals3, b3)
 
 
 def spmm_pallas_batched(blocked, b_dense: jax.Array, *, n_blk: int = 128,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool = True,
+                        precision: str | None = None) -> jax.Array:
     """Batched gather-free SpMM: one ``(H, N/N_BLK, W)`` grid for H heads.
 
     ``blocked.vals`` may be ``(NNZP, V)`` (shared pattern values) or
@@ -334,11 +404,15 @@ def spmm_pallas_batched(blocked, b_dense: jax.Array, *, n_blk: int = 128,
     batched returns ``(H, M, N)``; neither batched falls through to the
     single-head :func:`spmm_pallas`.  Results are bitwise-equal to stacking
     H per-slice launches (identical per-cell accumulation order).
+    ``precision`` follows :func:`spmm_pallas`; ``"int8"`` requires shared
+    (2-D) pattern values.
     """
-    vals = blocked.vals
-    vb, bb = vals.ndim == 3, b_dense.ndim == 3
+    vb, bb = blocked.vals.ndim == 3, b_dense.ndim == 3
     if not (vb or bb):
-        return spmm_pallas(blocked, b_dense, n_blk=n_blk, interpret=interpret)
+        return spmm_pallas(blocked, b_dense, n_blk=n_blk, interpret=interpret,
+                           precision=precision)
+    vals, scales, quantized, b_dense = _apply_precision(
+        blocked, b_dense, precision)
     h = vals.shape[0] if vb else b_dense.shape[0]
     m, _ = blocked.shape
     n = b_dense.shape[-1]
@@ -349,10 +423,11 @@ def spmm_pallas_batched(blocked, b_dense: jax.Array, *, n_blk: int = 128,
         b3 = jnp.pad(b3, ((0, 0), (0, 0), (0, n_pad - n)))
     vals3 = vals if vb else vals[None]
     out = _batched_spmm_call(
-        blocked.win_ptr, blocked.cols, vals3, b3,
+        blocked.win_ptr, blocked.cols, scales, vals3, b3,
         num_windows=blocked.num_windows, v=blocked.vector_size,
         k_blk=blocked.k_blk, n_blk=n_blk, h=h,
         vals_batched=vb, b_batched=bb, interpret=interpret,
+        quantized=quantized,
     )
     return out[:, :m, :n]
 
@@ -375,10 +450,11 @@ def spmm_pallas_batched(blocked, b_dense: jax.Array, *, n_blk: int = 128,
 # ---------------------------------------------------------------------------
 
 
-def _balanced_spmm_kernel(seg_win_ref, seg_meta_ref, cols_ref, vals_hbm,
-                          b_hbm, o_ref, acc_ref, vals_buf, b_buf, sems, *,
-                          k_blk: int, n_blk: int, vals_batched: bool,
-                          b_batched: bool):
+def _balanced_spmm_kernel(seg_win_ref, seg_meta_ref, cols_ref, scales_ref,
+                          vals_hbm, b_hbm, o_ref, acc_ref, vals_buf, b_buf,
+                          sems, *, k_blk: int, n_blk: int,
+                          vals_batched: bool, b_batched: bool,
+                          quantized: bool):
     h = pl.program_id(0)
     j = pl.program_id(1)
     s = pl.program_id(2)
@@ -426,12 +502,15 @@ def _balanced_spmm_kernel(seg_win_ref, seg_meta_ref, cols_ref, vals_hbm,
 
         for cp in block_copies(blk, slot):
             cp.wait()
-        acc_ref[...] += jax.lax.dot_general(
+        contrib = jax.lax.dot_general(
             vals_buf[slot].astype(jnp.float32),
             b_buf[slot].astype(jnp.float32),
             dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
+        if quantized:
+            contrib = contrib * scales_ref[blk]
+        acc_ref[...] += contrib
         return carry
 
     jax.lax.fori_loop(lo, hi, body, 0)
@@ -444,24 +523,25 @@ def _balanced_spmm_kernel(seg_win_ref, seg_meta_ref, cols_ref, vals_hbm,
 @functools.partial(
     jax.jit,
     static_argnames=("num_windows", "v", "k_blk", "n_blk", "h",
-                     "vals_batched", "b_batched", "interpret"),
+                     "vals_batched", "b_batched", "interpret", "quantized"),
 )
-def _balanced_spmm_call(seg_win, seg_meta, cols, vals3, b3, *, num_windows,
-                        v, k_blk, n_blk, h, vals_batched, b_batched,
-                        interpret):
+def _balanced_spmm_call(seg_win, seg_meta, cols, scales, vals3, b3, *,
+                        num_windows, v, k_blk, n_blk, h, vals_batched,
+                        b_batched, interpret, quantized=False):
     n_pad = b3.shape[-1]
     ns = seg_win.shape[0]
     grid = (h, n_pad // n_blk, ns)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),  # vals stay in HBM
             pl.BlockSpec(memory_space=pltpu.ANY),  # B stays in HBM
         ],
-        out_specs=pl.BlockSpec((1, v, n_blk),
-                               lambda hh, j, s, sw, sm, c: (hh, sw[s], j)),
+        out_specs=pl.BlockSpec(
+            (1, v, n_blk),
+            lambda hh, j, s, sw, sm, c, sc: (hh, sw[s], j)),
         scratch_shapes=[
             pltpu.VMEM((v, n_blk), jnp.float32),           # fp32 accumulator
             pltpu.VMEM((2, k_blk, v), vals3.dtype),        # vals double-buffer
@@ -471,7 +551,7 @@ def _balanced_spmm_call(seg_win, seg_meta, cols, vals3, b3, *, num_windows,
     )
     kernel = functools.partial(
         _balanced_spmm_kernel, k_blk=k_blk, n_blk=n_blk,
-        vals_batched=vals_batched, b_batched=b_batched,
+        vals_batched=vals_batched, b_batched=b_batched, quantized=quantized,
     )
     out_shape = jax.ShapeDtypeStruct((h, num_windows * v, n_pad), b3.dtype)
     return pl.pallas_call(
@@ -479,12 +559,13 @@ def _balanced_spmm_call(seg_win, seg_meta, cols, vals3, b3, *, num_windows,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(seg_win, seg_meta, cols, vals3, b3)
+    )(seg_win, seg_meta, cols, scales, vals3, b3)
 
 
 def spmm_pallas_balanced(blocked, b_dense: jax.Array, *, schedule=None,
                          split_blk: int = 1, n_blk: int = 128,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool = True,
+                         precision: str | None = None) -> jax.Array:
     """Block-parallel load-balanced SpMM over a :class:`BlockedMEBCRS`.
 
     ``schedule`` is the precomputed :class:`~repro.core.format.Schedule`;
@@ -499,7 +580,8 @@ def spmm_pallas_balanced(blocked, b_dense: jax.Array, *, schedule=None,
     """
     if schedule is None:
         schedule = blocked.schedule(split_blk)
-    vals = blocked.vals
+    vals, scales, quantized, b_dense = _apply_precision(
+        blocked, b_dense, precision)
     vb, bb = vals.ndim == 3, b_dense.ndim == 3
     h = vals.shape[0] if vb else (b_dense.shape[0] if bb else 1)
     m, _ = blocked.shape
@@ -511,10 +593,11 @@ def spmm_pallas_balanced(blocked, b_dense: jax.Array, *, schedule=None,
         b3 = jnp.pad(b3, ((0, 0), (0, 0), (0, n_pad - n)))
     vals3 = vals if vb else vals[None]
     out = _balanced_spmm_call(
-        schedule.seg_win, schedule.seg_meta, blocked.cols, vals3, b3,
+        schedule.seg_win, schedule.seg_meta, blocked.cols, scales, vals3, b3,
         num_windows=blocked.num_windows, v=blocked.vector_size,
         k_blk=blocked.k_blk, n_blk=n_blk, h=h,
         vals_batched=vb, b_batched=bb, interpret=interpret,
+        quantized=quantized,
     )
     out = out[:, :m, :n]
     return out if (vb or bb) else out[0]
@@ -582,10 +665,25 @@ def _zero_unvisited(out, block_win, num_windows, v):
 
 
 def spmm_pallas_staged(blocked, b_dense: jax.Array, *, n_blk: int = 128,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: bool = True,
+                       precision: str | None = None) -> jax.Array:
     """Legacy staged-gather SpMM: materializes ``bgath = B[cols]`` in HBM
     (an ``avg_vectors_per_row ×`` blow-up of B) before the kernel.  Kept as
-    the baseline the fused path is measured against."""
+    the baseline the fused path is measured against.  ``precision``
+    supports ``"fp32"``/``"bf16"`` (the staged grid has no scale prefetch,
+    so ``"int8"`` is not offered here)."""
+    from repro.core.quantize import validate_precision
+
+    validate_precision(precision)
+    if precision == "int8":
+        raise ValueError("spmm_pallas_staged has no int8 path (no per-block "
+                         "scale prefetch in the staged grid); use the fused "
+                         "or balanced impls")
+    vals = blocked.vals
+    if precision is not None:
+        tgt = jnp.float32 if precision == "fp32" else jnp.bfloat16
+        b_dense = b_dense.astype(tgt)
+        vals = vals.astype(tgt)
     m, _ = blocked.shape
     v = blocked.vector_size
     num_windows = blocked.num_windows
@@ -594,7 +692,7 @@ def spmm_pallas_staged(blocked, b_dense: jax.Array, *, n_blk: int = 128,
 
     bgath = jnp.take(b_dense, blocked.cols, axis=0)  # staged gather in HBM
     out = _staged_spmm_call(
-        blocked.block_win, blocked.vals, bgath, num_windows=num_windows,
+        blocked.block_win, vals, bgath, num_windows=num_windows,
         v=v, k_blk=blocked.k_blk, n_blk=n_blk, interpret=interpret,
     )
     out = _zero_unvisited(out, blocked.block_win, num_windows, v)
@@ -610,8 +708,16 @@ def spmm_pallas_staged(blocked, b_dense: jax.Array, *, n_blk: int = 128,
 
 def spmm_hbm_bytes(blocked, n: int, *, n_blk: int = 128,
                    impl: str = "fused", value_bytes: int = 4,
+                   vals_value_bytes: int | None = None,
                    schedule=None) -> int:
     """Modeled HBM bytes moved by one SpMM under ``impl``.
+
+    ``value_bytes`` is the element size of the dense operand and output
+    (4 for fp32, 2 for bf16 — callers derive it from the dtype, see
+    :func:`benchmarks.common.dtype_bytes`); ``vals_value_bytes`` is the
+    sparse-value element size when it differs (int8 values: 1, plus the
+    4-byte per-K-block scale the quantized kernels scalar-prefetch).
+    Defaults to ``value_bytes``.
 
     ``fused`` / ``noncoalesced``: each needed dense row is DMA'd from B
     exactly once per output column tile; vals tiles are re-read per column
@@ -632,13 +738,17 @@ def spmm_hbm_bytes(blocked, n: int, *, n_blk: int = 128,
     v = blocked.vector_size
     nnzp = int(blocked.cols.shape[0])
     w = blocked.num_windows
+    nb = blocked.num_blocks
     n_blk = min(n_blk, max(n, 1))
     n_pad = -(-n // n_blk) * n_blk
     nj = n_pad // n_blk
+    vvb = value_bytes if vals_value_bytes is None else vals_value_bytes
 
     dense_pass = nnzp * n_pad * value_bytes      # one sweep over needed rows
-    vals_bytes = nj * nnzp * v * value_bytes     # vals re-read per column tile
+    vals_bytes = nj * nnzp * v * vvb             # vals re-read per column tile
     meta_bytes = 4 * (w + 1) + 4 * nnzp          # win_ptr/block_win + cols
+    if vvb != value_bytes:
+        meta_bytes += 4 * nb                     # per-K-block dequant scales
     out_bytes = w * v * n_pad * value_bytes      # output written once
 
     if impl in ("fused", "noncoalesced"):

@@ -25,6 +25,8 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import dequantize_blocked, quantize_blocked
+
 __all__ = ["CompressionConfig", "init_error", "compress_int8",
            "decompress_int8", "compress_topk", "decompress_topk",
            "compressed_bytes", "raw_bytes"]
@@ -44,23 +46,13 @@ def init_error(params: Any) -> Any:
 
 
 # ------------------------------------------------------------------- int8 --
+# The absmax block quantizer is shared with the mixed-precision kernel
+# path's per-K-block value scales (DESIGN.md §13) — one implementation in
+# core/quantize.py serves both; these aliases keep the historical local
+# names used throughout this module.
 
-
-def _q_leaf(x: jax.Array, block: int):
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % block
-    xp = jnp.pad(flat, (0, pad)).reshape(-1, block)
-    scale = jnp.maximum(jnp.max(jnp.abs(xp), axis=-1, keepdims=True), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
-    return q, scale[:, 0]
-
-
-def _dq_leaf(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
-    x = (q.astype(f32) * scale[:, None]).reshape(-1)
-    size = 1
-    for s in shape:
-        size *= s
-    return x[:size].reshape(shape)
+_q_leaf = quantize_blocked
+_dq_leaf = dequantize_blocked
 
 
 def compress_int8(grads: Any, err: Any, cfg: CompressionConfig
@@ -124,7 +116,7 @@ def decompress_topk(comp: Any, like: Any) -> Any:
 
 
 def raw_bytes(grads: Any) -> int:
-    return sum(l.size * 4 for l in jax.tree.leaves(grads))
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(grads))
 
 
 def compressed_bytes(comp: Any) -> int:

@@ -1,0 +1,176 @@
+"""Shared block quantizer: round-trip bounds, format scales, compression.
+
+The absmax int8 quantizer (repro/core/quantize.py) backs both the DP
+gradient compression and the per-K-block value scales of the
+mixed-precision kernel path (DESIGN.md §13) — these tests pin the error
+bound both consumers rely on (|x − dq(q(x))| ≤ scale/2 per element) and
+that train/compression.py really runs through the shared code.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from _hypothesis_compat import given, settings, st  # degrades to skips
+
+from repro.core import block_format, from_dense
+from repro.core.quantize import (
+    cast_precision,
+    dequantize_block_values,
+    dequantize_blocked,
+    precision_dtype,
+    quantize_block_values,
+    quantize_blocked,
+    quantize_format,
+    validate_precision,
+)
+
+
+def random_sparse(rng, m, k, density):
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    a *= rng.random((m, k)) < density
+    return a
+
+
+# ---------------------------------------------------------- round trips ----
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    size=st.integers(1, 300),
+    block=st.integers(1, 64),
+    scale_exp=st.integers(-8, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_blocked_roundtrip_bound(size, block, scale_exp, seed):
+    """Per-element round-trip error ≤ scale/2, across magnitudes/blockings."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(size) * 10.0 ** scale_exp).astype(np.float32)
+    q, scale = quantize_blocked(jnp.asarray(x), block)
+    back = np.asarray(dequantize_blocked(q, scale, x.shape))
+    err = np.abs(back - x)
+    bound = np.repeat(np.asarray(scale), block)[: size] / 2
+    # rounding happens in fp32 → allow 1 ulp of slack on the half-scale bound
+    assert np.all(err <= bound * (1 + 1e-6) + 1e-12)
+
+
+def test_quantize_blocked_zero_and_constant_blocks():
+    q, scale = quantize_blocked(jnp.zeros(16), 8)
+    assert q.dtype == jnp.int8 and np.all(np.asarray(q) == 0)
+    back = dequantize_blocked(q, scale, (16,))
+    assert np.all(np.asarray(back) == 0.0)
+    # constant block quantizes to ±127 exactly
+    q, scale = quantize_blocked(jnp.full(8, -3.0), 8)
+    np.testing.assert_allclose(
+        np.asarray(dequantize_blocked(q, scale, (8,))), -3.0, rtol=1e-6)
+
+
+def test_quantize_blocked_is_jittable():
+    import jax
+
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(96), jnp.float32)
+    q1, s1 = jax.jit(lambda t: quantize_blocked(t, 32))(x)
+    q2, s2 = quantize_blocked(x, 32)
+    # jit may fuse the divide differently → 1-ulp scale wiggle is fine
+    assert q1.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    assert np.max(np.abs(np.asarray(q1, np.int32)
+                         - np.asarray(q2, np.int32))) <= 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    density=st.floats(0.0, 0.6),
+    k_blk=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_values_roundtrip_bound(m, k, density, k_blk, seed):
+    """ME-BCRS value quantization: error ≤ scale/2 per element, shape kept."""
+    rng = np.random.default_rng(seed)
+    blocked = block_format(
+        from_dense(random_sparse(rng, m, k, density), vector_size=8),
+        k_blk=k_blk)
+    vals = np.asarray(blocked.vals)
+    q, scales = quantize_block_values(blocked.vals, k_blk)
+    assert q.shape == vals.shape and q.dtype == jnp.int8
+    assert scales.shape == (vals.shape[0] // k_blk,)
+    back = np.asarray(dequantize_block_values(q, scales))
+    bound = np.repeat(np.asarray(scales), k_blk)[:, None] / 2
+    assert np.all(np.abs(back - vals) <= bound * (1 + 1e-6) + 1e-12)
+
+
+def test_block_values_zero_padding_stays_zero():
+    """ME-BCRS zero-pad vectors inside a K-block must quantize to exact 0
+    (the kernels rely on padding contributing nothing at int8)."""
+    rng = np.random.default_rng(7)
+    a = random_sparse(rng, 24, 30, 0.2)
+    blocked = block_format(from_dense(a, vector_size=8), k_blk=8)
+    vals = np.asarray(blocked.vals)
+    q, _ = quantize_block_values(blocked.vals, 8)
+    assert np.all(np.asarray(q)[vals == 0.0] == 0)
+
+
+def test_block_values_rejects_batched():
+    vals3 = jnp.zeros((2, 16, 8))
+    with pytest.raises(ValueError, match="2-D"):
+        quantize_block_values(vals3, 8)
+
+
+def test_quantize_format_attaches_scales():
+    rng = np.random.default_rng(3)
+    blocked = block_format(
+        from_dense(random_sparse(rng, 40, 40, 0.2), vector_size=8), k_blk=8)
+    qf = quantize_format(blocked)
+    assert qf.vals.dtype == jnp.int8 and qf.scales is not None
+    assert qf.scales.shape == (blocked.vals.shape[0] // 8,)
+    # metadata untouched
+    assert np.array_equal(np.asarray(qf.cols), np.asarray(blocked.cols))
+    assert np.array_equal(np.asarray(qf.win_ptr), np.asarray(blocked.win_ptr))
+
+
+# ---------------------------------------------------- precision helpers ----
+
+
+def test_validate_and_dtype_helpers():
+    for p in (None, "fp32", "bf16", "int8"):
+        assert validate_precision(p) == p
+    with pytest.raises(ValueError, match="unknown precision"):
+        validate_precision("fp16")
+    assert precision_dtype("fp32") == jnp.float32
+    assert precision_dtype("bf16") == jnp.bfloat16
+    assert precision_dtype("int8") == jnp.bfloat16  # dense side rides bf16
+    with pytest.raises(ValueError):
+        precision_dtype(None)
+
+
+def test_cast_precision_policy():
+    x = jnp.ones((4, 4), jnp.float32)
+    y = jnp.ones((4, 4), jnp.bfloat16)
+    ox, oy = cast_precision(None, x, y)
+    assert ox is x and oy is y  # None = untouched
+    ox, oy = cast_precision("bf16", x, y)
+    assert ox.dtype == jnp.bfloat16 and oy.dtype == jnp.bfloat16
+    (ox,) = cast_precision("fp32", y)
+    assert ox.dtype == jnp.float32
+    with pytest.raises(ValueError, match="int8 applies to SpMM"):
+        cast_precision("int8", x)
+
+
+# ----------------------------------------- compression uses shared code ----
+
+
+def test_compression_matches_shared_quantizer():
+    """train/compression.py int8 leaves == quantize_blocked/dequantize_blocked."""
+    from repro.train.compression import (CompressionConfig, compress_int8,
+                                         decompress_int8, init_error)
+
+    rng = np.random.default_rng(11)
+    grads = {"w": jnp.asarray(rng.standard_normal((13, 7)), jnp.float32)}
+    cfg = CompressionConfig(kind="int8", block=32)
+    comp, _ = compress_int8(grads, init_error(grads), cfg)
+    back = decompress_int8(comp, grads)["w"]
+    q, scale = quantize_blocked(grads["w"], 32)
+    np.testing.assert_array_equal(
+        np.asarray(back), np.asarray(dequantize_blocked(q, scale, (13, 7))))

@@ -356,25 +356,28 @@ def test_attention_ad_balanced_fwd_and_grads(h):
 # ------------------------------------------------------------ autotuner ----
 
 
-def test_tuneconfig_v3_roundtrip_and_v2_discard(tmp_path):
+def test_tuneconfig_roundtrip_and_stale_schema_discard(tmp_path):
     import json
 
     path = str(tmp_path / "tune.json")
-    # a v2-era file (no split_blk, old schema tag) must be discarded
+    # a v2-era file (no split_blk/precision, old schema tag) must be
+    # discarded wholesale — its buckets no longer mean the same thing
     with open(path, "w") as f:
         json.dump({"schema": 2, "configs": {"stale": {
             "k_blk": 8, "n_blk": 64, "median_ms": 1.0}}}, f)
     cache = AutotuneCache(path)
     assert cache.get("stale") is None
-    assert SCHEMA_VERSION == 3
+    assert SCHEMA_VERSION == 4
 
-    cfg = TuneConfig(k_blk=8, n_blk=64, median_ms=0.5, split_blk=2)
+    cfg = TuneConfig(k_blk=8, n_blk=64, median_ms=0.5, split_blk=2,
+                     precision="bf16")
     cache.put("k", cfg)
     assert AutotuneCache(path).get("k") == cfg
     with open(path) as f:
         raw = json.load(f)
-    assert raw["schema"] == 3
+    assert raw["schema"] == 4
     assert raw["configs"]["k"]["split_blk"] == 2
+    assert raw["configs"]["k"]["precision"] == "bf16"
 
 
 def test_stats_key_has_skew_bucket():
