@@ -17,6 +17,7 @@ FLAGS = (
     ("batched", "batched"),
     ("load_balanced", "balanced"),
     ("multi_device", "multi-dev"),
+    ("overlapped", "overlap"),
     ("needs_canonical", "canonical-in"),
     ("returns_format", "format-out"),
 )

@@ -57,6 +57,12 @@ assert bal <= 1.25, f"device partition balance regressed: {bal}"
 mp = summary["hbm_reduction_geomean_bf16_vs_fp32"]
 print(f"bf16/fp32 modeled HBM reduction geomean {mp:.2f}x")
 assert mp >= 1.8, f"mixed-precision HBM floor regressed: {mp}"
+# Overlapped-ring floor (DESIGN.md §14): modeled overlapped-vs-bulk
+# makespan (best over n_batches) must stay >= 1.15x at 8 devices on
+# every row-balanced overlap-suite matrix (currently min ~1.66x).
+ovl = summary["overlap_makespan_improvement_min_8dev"]
+print(f"8-device overlap/bulk makespan min {ovl:.2f}x")
+assert ovl >= 1.15, f"overlapped-ring makespan floor regressed: {ovl}"
 EOF
 
   # Multi-device sharded smoke (DESIGN.md §12): two training steps through
@@ -65,5 +71,12 @@ EOF
   # under shard_map, loss must decrease.
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python examples/gnn_train.py --steps 2 --impl pallas_sharded \
+    --mesh 4,2 --model gcn --scale 0.002
+
+  # Overlapped sharded smoke (DESIGN.md §14): same mesh, but the trailing
+  # psum replaced by the double-buffered ppermute ring over segment
+  # batches — forward and both duality backward ops run the overlap path.
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python examples/gnn_train.py --steps 2 --impl pallas_sharded_overlap \
     --mesh 4,2 --model gcn --scale 0.002
 fi

@@ -96,6 +96,11 @@ class ADPlan:
     bwd_part: Optional[object] = None
     fwd_part_wa: Optional[object] = None
     mesh: Optional[object] = None       # jax.sharding.Mesh
+    # Pipeline depth for impl="pallas_sharded_overlap" (DESIGN.md §14):
+    # the partitions above are built with this many segment batches per
+    # device, and every traced call runs the ppermute ring at that depth.
+    # 1 elsewhere (a single batch: ring == bulk order, no pipelining).
+    overlap_batches: int = 1
     # Mixed-precision level (DESIGN.md §13) every traced call runs at:
     # None = operand dtypes as given; "int8" quantizes the forward SpMM's
     # sparse values per K-block *in trace* (fp32 masters, straight-through
@@ -135,18 +140,18 @@ class ADPlan:
                  self.bwd_sched, self.fwd_part, self.bwd_part,
                  self.fwd_part_wa),
                 (self.impl, self.n_blk, self.n_blk_t, self.f_blk, self.mesh,
-                 self.precision))
+                 self.precision, self.overlap_batches))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         (fwd, bwd, perm, fwd_sched, bwd_sched, fwd_part, bwd_part,
          fwd_part_wa) = leaves
-        impl, n_blk, n_blk_t, f_blk, mesh, precision = aux
+        impl, n_blk, n_blk_t, f_blk, mesh, precision, overlap_batches = aux
         return cls(fwd=fwd, bwd=bwd, perm=perm, impl=impl, n_blk=n_blk,
                    n_blk_t=n_blk_t, f_blk=f_blk, fwd_sched=fwd_sched,
                    bwd_sched=bwd_sched, fwd_part=fwd_part,
                    bwd_part=bwd_part, fwd_part_wa=fwd_part_wa, mesh=mesh,
-                   precision=precision)
+                   precision=precision, overlap_batches=overlap_batches)
 
 
 def _blocked_perm(blocked_a: BlockedMEBCRS,
@@ -182,7 +187,7 @@ def _blocked_perm(blocked_a: BlockedMEBCRS,
 def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
             n_blk: int = 128, f_blk: int = 128, split_blk: int = 1,
             n_example: int = 64, interpret: Optional[bool] = None,
-            cache=None, mesh=None,
+            cache=None, mesh=None, overlap_batches: Optional[int] = None,
             precision: Optional[str] = None) -> ADPlan:
     """Build (and memoize on ``fmt``) the differentiable-op plan.
 
@@ -209,28 +214,41 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
     — SDDMM, attention, both duality backward ops — run the *dense level*
     (bf16 for an int8 plan), and the custom_vjp epilogues cast gradients
     back to the residuals' dtypes, so fp32 masters accumulate fp32.
+
+    ``impl="pallas_sharded_overlap"`` (DESIGN.md §14) builds the same
+    per-direction partitions with ``overlap_batches`` segment batches per
+    device (default 2; 1 disables pipelining), so every traced call —
+    forward, both duality backward ops, and the attention recompute —
+    replaces the bulk psum with the double-buffered ``ppermute`` ring.
     """
     from .quantize import validate_precision
 
     validate_precision(precision)
     entry = _dispatch.require("spmm", impl, differentiable=True,
                               precision=precision)
-    del entry
     if precision is not None:
         _dispatch.require("sddmm", impl, differentiable=True,
                           precision=_dense_precision(precision))
     if isinstance(fmt, BlockedMEBCRS):
         raise ValueError("ad_plan needs the canonical MEBCRS (it blocks "
                          "both A and its transpose itself)")
-    if impl == "pallas_sharded":
+    if overlap_batches is None:
+        overlap_batches = 2 if entry.overlapped else 1
+    elif not entry.overlapped and overlap_batches != 1:
+        raise ValueError(
+            f"ad_plan(overlap_batches={overlap_batches}) needs an "
+            f"overlapped impl (got impl={impl!r}); only "
+            f"'pallas_sharded_overlap' pipelines segment batches")
+    if entry.multi_device:
         from repro.distributed.sparse_shard import _resolve_mesh
 
         mesh = _resolve_mesh(mesh)
     elif mesh is not None:
         raise ValueError(
-            f"ad_plan(mesh=...) is only meaningful for the multi-device "
-            f"impl 'pallas_sharded' (got impl={impl!r}); dropping the "
-            f"mesh would silently run single-device")
+            f"ad_plan(mesh=...) is only meaningful for a multi-device "
+            f"impl like 'pallas_sharded' (got impl={impl!r}); dropping "
+            f"the mesh would silently run single-device")
+    del entry
 
     # Only the tuned path consults interpret/cache (the tiles it picks
     # differ per execution mode and per cache file) — resolve them into
@@ -242,7 +260,7 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
         interp = ops._resolve_interpret(interpret)
         cache_tag = getattr(cache, "path", None) if cache is not None else None
     key = (impl, k_blk, n_blk, f_blk, int(split_blk), int(n_example), interp,
-           cache_tag, mesh, precision)
+           cache_tag, mesh, precision, int(overlap_batches))
     memo = getattr(fmt, "_ad_plans", None)
     if memo is None:
         memo = {}
@@ -254,7 +272,9 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
     k_blk_f = k_blk_t = k_blk
     n_blk_t = n_blk
     split_f = split_t = (split_blk if impl in ("pallas_balanced",
-                                               "pallas_sharded") else 0)
+                                               "pallas_sharded",
+                                               "pallas_sharded_overlap")
+                         else 0)
     if impl == "pallas_tuned":
         from repro.kernels import autotune
 
@@ -285,10 +305,11 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
     # valid *unsplit* schedule, not "no schedule"; for pallas_tuned a split
     # of 0 means the sweep chose the window-parallel kernel for that
     # direction.
-    want_f = impl in ("pallas_balanced", "pallas_sharded") or split_f > 0
-    want_t = impl in ("pallas_balanced", "pallas_sharded") or split_t > 0
+    sharded_impls = ("pallas_sharded", "pallas_sharded_overlap")
+    want_f = impl in ("pallas_balanced",) + sharded_impls or split_f > 0
+    want_t = impl in ("pallas_balanced",) + sharded_impls or split_t > 0
     fwd_part = bwd_part = fwd_part_wa = None
-    if impl == "pallas_sharded":
+    if impl in sharded_impls:
         from repro.distributed.sparse_shard import sharded_schedule
 
         ndev = mesh.shape["data"]
@@ -298,20 +319,25 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
         # Each direction's partition is cost-balanced for the tile that
         # direction runs (SDDMM reuses fwd_part; its f_blk and the SpMM
         # n_blk share the 128 default, and the cut positions are only
-        # mildly tile-sensitive).
+        # mildly tile-sensitive).  The overlap impl builds the same
+        # partitions with ``overlap_batches`` segment batches per device
+        # (batch cuts inherit each partition's window_split rule).
+        nbat = overlap_batches
         fwd_part = sharded_schedule(blocked_f, ndev, split_blk=split_f,
-                                    n_blk=n_blk)
+                                    n_blk=n_blk, n_batches=nbat)
         bwd_part = sharded_schedule(blocked_t, ndev, split_blk=split_t,
-                                    n_blk=n_blk_t)
+                                    n_blk=n_blk_t, n_batches=nbat)
         fwd_part_wa = sharded_schedule(blocked_f, ndev, split_blk=split_f,
-                                       n_blk=n_blk, window_split=False)
+                                       n_blk=n_blk, window_split=False,
+                                       n_batches=nbat)
     plan = ADPlan(fwd=blocked_f, bwd=blocked_t,
                   perm=jnp.asarray(_blocked_perm(blocked_f, blocked_t)),
                   impl=impl, n_blk=n_blk, n_blk_t=n_blk_t, f_blk=f_blk,
                   fwd_sched=blocked_f.schedule(split_f) if want_f else None,
                   bwd_sched=blocked_t.schedule(split_t) if want_t else None,
                   fwd_part=fwd_part, bwd_part=bwd_part,
-                  fwd_part_wa=fwd_part_wa, mesh=mesh, precision=precision)
+                  fwd_part_wa=fwd_part_wa, mesh=mesh, precision=precision,
+                  overlap_batches=overlap_batches)
     memo[key] = plan
     return plan
 
@@ -334,7 +360,8 @@ def _exec_impl(impl: str) -> str:
 
 def _is_pallas(impl: str) -> bool:
     """Pallas-family impls run native batched grids (no per-slice loop)."""
-    return _exec_impl(impl) in ("pallas", "pallas_balanced", "pallas_sharded")
+    return _exec_impl(impl) in ("pallas", "pallas_balanced", "pallas_sharded",
+                                "pallas_sharded_overlap")
 
 
 def _map_slices(entry, fn, batched_args, shared_args):
@@ -366,12 +393,14 @@ def _run_spmm(impl, interpret, plan: ADPlan, vals, b, *, transposed: bool,
     n_blk = plan.n_blk_t if transposed else plan.n_blk
     sched = plan.bwd_sched if transposed else plan.fwd_sched
     ex = _exec_impl(impl)
-    if ex == "pallas_sharded":
+    if ex in ("pallas_sharded", "pallas_sharded_overlap"):
         # one local balanced launch per device over this direction's own
         # partition, outputs reassembled by the psum (DESIGN.md §12) —
         # dB's transpose-SpMM runs on the Aᵀ partition, which is exactly
-        # the "psum for dB" of the sharded backward
-        return _dispatch.dispatch("spmm", "pallas_sharded",
+        # the "psum for dB" of the sharded backward; the overlap impl
+        # rides the same partitions (batched to plan.overlap_batches)
+        # with the ppermute ring in place of the psum (§14)
+        return _dispatch.dispatch("spmm", ex,
                                   with_values(blocked, vals), b,
                                   k_blk=blocked.k_blk, n_blk=n_blk,
                                   schedule=sched, mesh=plan.mesh,
@@ -399,9 +428,9 @@ def _run_spmm(impl, interpret, plan: ADPlan, vals, b, *, transposed: bool,
 def _run_sddmm(impl, interpret, plan: ADPlan, q, k, *, precision=None):
     precision = _dense_precision(precision)   # SDDMM has no int8 level
     ex = _exec_impl(impl)
-    if ex == "pallas_sharded":
+    if ex in ("pallas_sharded", "pallas_sharded_overlap"):
         # SDDMM samples A's pattern → the forward partition's block list
-        return _dispatch.dispatch("sddmm", "pallas_sharded", plan.fwd, q, k,
+        return _dispatch.dispatch("sddmm", ex, plan.fwd, q, k,
                                   k_blk=plan.fwd.k_blk, f_blk=plan.f_blk,
                                   schedule=plan.fwd_sched, mesh=plan.mesh,
                                   part=plan.fwd_part, interpret=interpret,
@@ -586,11 +615,13 @@ def _staged_attention(impl, interpret, plan: ADPlan, q, k, v, scale):
 
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _attention_ad(impl, interpret, plan: ADPlan, q, k, v, scale):
-    if _exec_impl(impl) == "pallas_sharded":
+    if _exec_impl(impl) in ("pallas_sharded", "pallas_sharded_overlap"):
         # sharded single-pass megakernel on the window-aligned forward
         # partition; the recompute backward (below) re-dispatches the
-        # sharded duality ops on each direction's own partition
-        return _dispatch.dispatch("attention", "pallas_sharded", plan.fwd,
+        # sharded duality ops on each direction's own partition.  The
+        # overlap impl pipelines window-aligned segment batches, so the
+        # online-softmax state never crosses a ring step (§14).
+        return _dispatch.dispatch("attention", _exec_impl(impl), plan.fwd,
                                   q, k, v, scale=scale, k_blk=plan.fwd.k_blk,
                                   schedule=plan.fwd_sched, mesh=plan.mesh,
                                   part=plan.fwd_part_wa, interpret=interpret,

@@ -42,6 +42,12 @@ Capability flags:
                    (DESIGN.md §12) — accepts ``mesh=`` / ``part=``
                    kwargs and produces outputs replicated over the
                    mesh's "data" axis
+  overlapped       the impl pipelines communication behind compute: it
+                   sub-splits each device's work into segment batches
+                   and circulates compact partials on a ``ppermute``
+                   ring instead of a trailing bulk ``psum``
+                   (DESIGN.md §14) — accepts an ``n_batches=`` kwarg
+                   (the ``ADPlan.overlap_batches`` knob)
 
 plus the ``precisions`` capability tuple (DESIGN.md §13): the precision
 levels the impl accepts via its ``precision=`` kwarg — a subset of
@@ -91,6 +97,7 @@ class OpImpl:
     returns_format: bool = False
     load_balanced: bool = False
     multi_device: bool = False
+    overlapped: bool = False
     precisions: Tuple[str, ...] = ("fp32",)
 
 
@@ -101,7 +108,8 @@ _REGISTRY: Dict[Tuple[str, str], OpImpl] = {}
 # (kernels are optional at core-import time, mirroring the old local
 # imports in core/spmm.py).
 _PROVIDERS = ("repro.core.spmm", "repro.core.sddmm", "repro.kernels.ops",
-              "repro.distributed.sparse_shard")
+              "repro.distributed.sparse_shard",
+              "repro.distributed.sparse_shard_overlap")
 _provider_errors: Dict[str, str] = {}
 _loaded = False
 _lock = threading.Lock()

@@ -13,14 +13,21 @@ from .sharding import (
     sparse_format_shardings,
     sparse_operand_pspec,
 )
+from .overlap import collective_matmul, ring_allgather_matmul, ring_scatter_pipeline
 from .sparse_shard import (
     ShardedSchedule,
     attention_sharded,
+    batch_costs,
     device_balance,
     partition_schedule,
     sddmm_sharded,
     sharded_schedule,
     spmm_sharded,
+)
+from .sparse_shard_overlap import (
+    attention_sharded_overlap,
+    sddmm_sharded_overlap,
+    spmm_sharded_overlap,
 )
 
 __all__ = [
@@ -37,7 +44,14 @@ __all__ = [
     "partition_schedule",
     "sharded_schedule",
     "device_balance",
+    "batch_costs",
     "spmm_sharded",
     "sddmm_sharded",
     "attention_sharded",
+    "spmm_sharded_overlap",
+    "sddmm_sharded_overlap",
+    "attention_sharded_overlap",
+    "ring_scatter_pipeline",
+    "ring_allgather_matmul",
+    "collective_matmul",
 ]

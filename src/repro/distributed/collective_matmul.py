@@ -1,85 +1,18 @@
-"""Collective matmul: ring all-gather overlapped with partial matmuls.
+"""Compatibility shim — the ring-overlap helpers moved to
+:mod:`repro.distributed.overlap`.
 
-Beyond-paper distributed-optimization trick (Wang et al., ASPLOS'23 style):
-for a TP matmul ``y = x @ W`` where ``x`` is sharded over the contracting
-dim (the FSDP/sequence axis) and ``W`` over the output dim, the naive plan
-is all-gather(x) → matmul — serialized.  Here we decompose the all-gather
-into |axis| ring steps (``lax.ppermute``) and issue one partial matmul per
-step, so on real hardware each ICI hop runs concurrently with the previous
-chunk's MXU work.  XLA's async collective-permute (`-start`/`-done`) makes
-the overlap explicit in the HLO — visible in the dry-run's collective
-schedule (EXPERIMENTS.md §Perf uses this as one hillclimb lever).
-
-Used through ``shard_map``; degenerate (axis size 1) falls back to plain dot.
+The seed version of this module was a standalone dense demo (ring
+all-gather overlapped with partial matmuls).  Its double-buffer pattern
+is now production machinery: :func:`repro.distributed.overlap.
+ring_scatter_pipeline` drives the ``pallas_sharded_overlap`` sparse ops
+(``distributed/sparse_shard_overlap``), which decompose the sharded
+sparse path's trailing ``psum`` into per-segment-batch ``ppermute``
+rings (DESIGN.md §14).  Import from ``repro.distributed.overlap``
+directly in new code.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from .overlap import collective_matmul, ring_allgather_matmul
 
 __all__ = ["ring_allgather_matmul", "collective_matmul"]
-
-
-def ring_allgather_matmul(x_shard: jax.Array, w: jax.Array, axis_name: str,
-                          axis_size: int) -> jax.Array:
-    """Per-shard body: x_shard (B, K/n), w (K/n stacked later? no —
-    w is the *full* contracting dim for this device's output columns).
-
-    x logically (B, K) sharded on K; w (K, N/n) resident.  Each ring step
-    contributes x_chunk @ w_rows for the chunk currently held.
-    """
-    n = axis_size
-    idx = jax.lax.axis_index(axis_name)
-    k_shard = x_shard.shape[-1]
-
-    def rows(i):
-        # chunk arriving at step s originated at device (idx + s) % n and
-        # covers w rows [src * k_shard : (src+1) * k_shard]
-        return jax.lax.dynamic_slice_in_dim(w, i * k_shard, k_shard, axis=0)
-
-    def step(s, carry):
-        acc, chunk = carry
-        src = jax.lax.rem(idx + s, n)
-        acc = acc + jnp.dot(chunk, _dyn_rows(w, src, k_shard),
-                            preferred_element_type=jnp.float32)
-        chunk = jax.lax.ppermute(
-            chunk, axis_name, [(i, (i - 1) % n) for i in range(n)])
-        return acc, chunk
-
-    out_cols = w.shape[1]
-    acc0 = jnp.zeros(x_shard.shape[:-1] + (out_cols,), jnp.float32)
-    acc, _ = jax.lax.fori_loop(0, n, step, (acc0, x_shard))
-    return acc.astype(x_shard.dtype)
-
-
-def _dyn_rows(w, src, k_shard):
-    return jax.lax.dynamic_slice_in_dim(w, src * k_shard, k_shard, axis=0)
-
-
-def collective_matmul(x: jax.Array, w: jax.Array, mesh: Mesh,
-                      contract_axis: str = "data",
-                      out_axis: Optional[str] = "model") -> jax.Array:
-    """y = x @ w with ring-overlapped gather of x's contracting shards.
-
-    x: (..., K) sharded P(..., contract_axis); w: (K, N) sharded P(None, out_axis).
-    Returns y: (..., N) sharded P(..., out_axis).
-    """
-    n = mesh.shape.get(contract_axis, 1)
-    if n == 1:
-        return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
-
-    from jax.experimental.shard_map import shard_map
-
-    x_spec = P(*([None] * (x.ndim - 1)), contract_axis)
-    w_spec = P(None, out_axis)
-    y_spec = P(*([None] * (x.ndim - 1)), out_axis)
-
-    body = functools.partial(ring_allgather_matmul, axis_name=contract_axis,
-                             axis_size=n)
-    return shard_map(body, mesh=mesh, in_specs=(x_spec, w_spec),
-                     out_specs=y_spec, check_rep=False)(x, w)

@@ -59,6 +59,7 @@ __all__ = [
     "sharded_schedule",
     "segment_costs",
     "device_balance",
+    "batch_costs",
     "spmm_sharded",
     "sddmm_sharded",
     "attention_sharded",
@@ -97,9 +98,31 @@ class ShardedSchedule:
       blk_own  (D, NNZP)   bool   value rows (blocks × K_BLK) this device
                                   produces — the SDDMM ownership mask
 
+    **Segment-batch sub-partition** (the ``pallas_sharded_overlap``
+    pipeline, DESIGN.md §14): each device's contiguous segment range is
+    further cut into ``n_batches`` contiguous batches by the same
+    :func:`segment_costs` model, so the ring can circulate batch ``i``'s
+    compact partial while batch ``i+1`` computes:
+
+      bseg_win (D, NB, NSLB)    per-batch segment windows (pad → dummy)
+      bseg_meta(D, NB, NSLB, 4) per-batch metadata, first/last flags
+                                recomputed **per batch** (a window
+                                straddling a batch cut stores one partial
+                                per batch; the ring's scatter-adds
+                                recombine them, like the psum did across
+                                devices)
+      brow_idx (D, NB, R)  int32 global output rows of the batch's
+                                windows — the compact ring buffer's
+                                row map; pad entries are ``m`` (their
+                                buffer rows are zero-masked)
+      bblk_id  (D, NB, NBLB)    per-batch block-indirect SDDMM grid
+      bblk_win (D, NB, NBLB)    owning window of each batch block
+      bval_idx (D, NB, RV) int32 global value rows of the batch's blocks
+                                (pad ``nnzp``, zero-masked)
+
     Aux (static): ``num_devices``, ``num_windows``, ``split_blk``,
-    ``window_split``, ``num_blocks``.  A pytree — pass it through
-    ``jit``/``grad``/``shard_map`` like the format itself.
+    ``window_split``, ``num_blocks``, ``n_batches``.  A pytree — pass it
+    through ``jit``/``grad``/``shard_map`` like the format itself.
     """
 
     seg_win: jax.Array
@@ -113,17 +136,31 @@ class ShardedSchedule:
     split_blk: int
     window_split: bool
     num_blocks: int
+    bseg_win: Optional[jax.Array] = None
+    bseg_meta: Optional[jax.Array] = None
+    brow_idx: Optional[jax.Array] = None
+    bblk_id: Optional[jax.Array] = None
+    bblk_win: Optional[jax.Array] = None
+    bval_idx: Optional[jax.Array] = None
+    n_batches: int = 1
 
     def tree_flatten(self):
         leaves = (self.seg_win, self.seg_meta, self.blk_id, self.blk_win,
-                  self.row_own, self.blk_own)
+                  self.row_own, self.blk_own, self.bseg_win, self.bseg_meta,
+                  self.brow_idx, self.bblk_id, self.bblk_win, self.bval_idx)
         aux = (self.num_devices, self.num_windows, self.split_blk,
-               self.window_split, self.num_blocks)
+               self.window_split, self.num_blocks, self.n_batches)
         return leaves, aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(*leaves, *aux)
+        (sw, sm, bi, bw, ro, bo, bsw, bsm, bri, bbi, bbw, bvi) = leaves
+        (d, w, sb, ws, nb, nbat) = aux
+        return cls(seg_win=sw, seg_meta=sm, blk_id=bi, blk_win=bw,
+                   row_own=ro, blk_own=bo, num_devices=d, num_windows=w,
+                   split_blk=sb, window_split=ws, num_blocks=nb,
+                   bseg_win=bsw, bseg_meta=bsm, brow_idx=bri, bblk_id=bbi,
+                   bblk_win=bbw, bval_idx=bvi, n_batches=nbat)
 
 
 # Fixed per-grid-cell issue overhead of the §11 cost model (bytes-
@@ -187,11 +224,39 @@ def _cut_points(costs: np.ndarray, num_devices: int,
     return np.asarray(cuts, np.int64)
 
 
+def _run_flags(seg_win: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Window-run first/last flags recomputed for a local segment range."""
+    n_loc = seg_win.size
+    run_first = np.ones(n_loc, bool)
+    run_first[1:] = seg_win[1:] != seg_win[:-1]
+    run_last = np.ones(n_loc, bool)
+    run_last[:-1] = seg_win[:-1] != seg_win[1:]
+    return run_first, run_last
+
+
+def _range_blocks(seg_meta: np.ndarray) -> Tuple[int, int]:
+    """[blk_lo, blk_hi) global block range of a local segment slice."""
+    lens = seg_meta[:, 1]
+    real = lens > 0
+    if real.any():
+        return (int(seg_meta[:, 0][real].min()),
+                int((seg_meta[:, 0] + lens)[real].max()))
+    return 0, 0
+
+
+def _range_rows(seg_win: np.ndarray, v: int, m: int) -> np.ndarray:
+    """Global output rows (< m) of the windows a segment slice touches."""
+    owned = np.unique(seg_win)
+    rows = (owned[:, None] * v + np.arange(v)).reshape(-1)
+    return rows[rows < m]
+
+
 def partition_schedule(blocked: BlockedMEBCRS,
                        schedule: Optional[Schedule] = None,
                        num_devices: int = 1, *, split_blk: int = 1,
                        window_split: bool = True,
-                       n_blk: int = 128) -> ShardedSchedule:
+                       n_blk: int = 128,
+                       n_batches: int = 1) -> ShardedSchedule:
     """Split a Schedule into ``num_devices`` balanced contiguous ranges.
 
     Host-side numpy like :func:`~repro.core.format.build_schedule` — call
@@ -200,18 +265,32 @@ def partition_schedule(blocked: BlockedMEBCRS,
     boundaries — mandatory for :func:`attention_sharded` (online-softmax
     statistics cannot cross devices), optional elsewhere (hub windows
     larger than a device's fair share then pin the balance).
+
+    ``n_batches`` sub-splits each device's range into that many
+    contiguous *segment batches* by the same cost model (the
+    ``pallas_sharded_overlap`` pipeline unit; batch cuts inherit the
+    ``window_split`` rule, so attention batches stay window-aligned).
+    When devices (or batches) outnumber non-empty segments, the surplus
+    ranges come out **store-only**: their slots hold only dummy-window /
+    zero-length pad entries, so the local launch stores zeros and the
+    reassembly (psum or ring) is a no-op for them — no failure, no
+    silent replication of real work.
     """
     if num_devices < 1:
         raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+    if n_batches < 1:
+        raise ValueError(f"n_batches must be >= 1, got {n_batches}")
     if schedule is None:
         schedule = blocked.schedule(split_blk)
     w = blocked.num_windows
     v = blocked.vector_size
+    k_blk = blocked.k_blk
     m = blocked.shape[0]
     nnzp = int(np.asarray(blocked.cols).shape[0])
     seg_win = np.asarray(schedule.seg_win).astype(np.int64)
     seg_meta = np.asarray(schedule.seg_meta).astype(np.int64)
     d = num_devices
+    nb = n_batches
 
     costs = segment_costs(blocked, schedule, n_blk=n_blk)
     cuts = _cut_points(costs, d, _allowed_cuts(seg_win, window_split))
@@ -225,6 +304,11 @@ def partition_schedule(blocked: BlockedMEBCRS,
     row_own = np.zeros((d, m), bool)
     blk_own = np.zeros((d, nnzp), bool)
     blk_ranges = []
+    # Per-(device, batch) segment sub-ranges: same greedy fair-share cut
+    # applied to the device's own cost slice (shared model — the batches
+    # the overlap pipeline executes are the batches the makespan model
+    # prices).
+    bat_ranges = [[None] * nb for _ in range(d)]
     for dev in range(d):
         lo, hi = int(cuts[dev]), int(cuts[dev + 1])
         n_loc = hi - lo
@@ -234,52 +318,100 @@ def partition_schedule(blocked: BlockedMEBCRS,
             # Recompute window-run boundaries locally: a straddled
             # window's first local segment must re-init the accumulator
             # and its last must store the partial (psum recombines).
-            run_first = np.ones(n_loc, bool)
-            run_first[1:] = seg_win[lo + 1:hi] != seg_win[lo:hi - 1]
-            run_last = np.ones(n_loc, bool)
-            run_last[:-1] = seg_win[lo:hi - 1] != seg_win[lo + 1:hi]
+            run_first, run_last = _run_flags(seg_win[lo:hi])
             sm[dev, :n_loc, 2] = run_first.astype(np.int32)
             sm[dev, :n_loc, 3] = run_last.astype(np.int32)
-            owned = np.unique(seg_win[lo:hi])
-            rows = (owned[:, None] * v + np.arange(v)).reshape(-1)
-            row_own[dev, rows[rows < m]] = True
-            lens = seg_meta[lo:hi, 1]
-            real = lens > 0
-            if real.any():
-                blk_lo = int(seg_meta[lo:hi, 0][real].min())
-                blk_hi = int((seg_meta[lo:hi, 0] + lens)[real].max())
-            else:
-                blk_lo = blk_hi = 0
+            row_own[dev, _range_rows(seg_win[lo:hi], v, m)] = True
+            blk_lo, blk_hi = _range_blocks(seg_meta[lo:hi])
         else:
             blk_lo = blk_hi = 0
         blk_ranges.append((blk_lo, blk_hi))
-        blk_own[dev, blk_lo * blocked.k_blk: blk_hi * blocked.k_blk] = True
+        blk_own[dev, blk_lo * k_blk: blk_hi * k_blk] = True
+        bcuts = lo + _cut_points(
+            costs[lo:hi], nb, _allowed_cuts(seg_win[lo:hi], window_split))
+        for b in range(nb):
+            bat_ranges[dev][b] = (int(bcuts[b]), int(bcuts[b + 1]))
 
     nbl = max((hi - lo for lo, hi in blk_ranges), default=0)
     blk_win_g = np.asarray(schedule.blk_win)
-    bid = np.zeros((d, nbl), np.int32)
-    bwin = np.zeros((d, nbl), np.int32)
-    for dev, (lo, hi) in enumerate(blk_ranges):
-        n_loc = hi - lo
-        pad_id = lo if n_loc else 0
-        bid[dev, :] = pad_id                     # pad: recompute own block
-        if blk_win_g.size:
-            bwin[dev, :] = blk_win_g[pad_id]
-        if n_loc:
-            bid[dev, :n_loc] = np.arange(lo, hi, dtype=np.int32)
-            bwin[dev, :n_loc] = blk_win_g[lo:hi]
+
+    def block_grid(shape, ranges):
+        bid = np.zeros(shape, np.int32)
+        bwin = np.zeros(shape, np.int32)
+        if shape[-1] == 0:                  # no scheduled blocks at all
+            return bid, bwin
+        flat_id = bid.reshape(-1, shape[-1])
+        flat_win = bwin.reshape(-1, shape[-1])
+        for i, (lo, hi) in enumerate(ranges):
+            n_loc = hi - lo
+            pad_id = lo if n_loc else 0
+            flat_id[i, :] = pad_id               # pad: recompute own block
+            if blk_win_g.size:
+                flat_win[i, :] = blk_win_g[pad_id]
+            if n_loc:
+                flat_id[i, :n_loc] = np.arange(lo, hi, dtype=np.int32)
+                flat_win[i, :n_loc] = blk_win_g[lo:hi]
+        return bid, bwin
+
+    bid, bwin = block_grid((d, nbl), blk_ranges)
+
+    # ---- segment-batch arrays ------------------------------------------
+    bat_counts = np.asarray([[hi - lo for lo, hi in row] for row in bat_ranges],
+                            np.int64)
+    nslb = max(int(bat_counts.max()) if bat_counts.size else 0, 1)
+    bsw = np.full((d, nb, nslb), w, np.int32)
+    bsm = np.zeros((d, nb, nslb, 4), np.int32)
+    bsm[:, :, :, 2] = 1
+    bsm[:, :, :, 3] = 1
+    bat_blk_ranges = []
+    row_lists = []
+    for dev in range(d):
+        for b in range(nb):
+            lo, hi = bat_ranges[dev][b]
+            n_loc = hi - lo
+            if n_loc:
+                bsw[dev, b, :n_loc] = seg_win[lo:hi]
+                bsm[dev, b, :n_loc] = seg_meta[lo:hi]
+                run_first, run_last = _run_flags(seg_win[lo:hi])
+                bsm[dev, b, :n_loc, 2] = run_first.astype(np.int32)
+                bsm[dev, b, :n_loc, 3] = run_last.astype(np.int32)
+                rows = _range_rows(seg_win[lo:hi], v, m)
+                blk_lo, blk_hi = _range_blocks(seg_meta[lo:hi])
+            else:
+                rows = np.zeros(0, np.int64)
+                blk_lo = blk_hi = 0
+            row_lists.append(rows)
+            bat_blk_ranges.append((blk_lo, blk_hi))
+
+    r_max = max((r.size for r in row_lists), default=0) or 1
+    bri = np.full((d, nb, r_max), m, np.int32)        # pad → zero-masked
+    flat_bri = bri.reshape(d * nb, r_max)
+    for i, rows in enumerate(row_lists):
+        flat_bri[i, :rows.size] = rows
+    nblb = max((hi - lo for lo, hi in bat_blk_ranges), default=0) or 1
+    bbi, bbw = block_grid((d, nb, nblb), bat_blk_ranges)
+    rv_max = max((hi - lo for lo, hi in bat_blk_ranges), default=0) * k_blk or 1
+    bvi = np.full((d, nb, rv_max), nnzp, np.int32)    # pad → zero-masked
+    flat_bvi = bvi.reshape(d * nb, rv_max)
+    for i, (lo, hi) in enumerate(bat_blk_ranges):
+        n_v = (hi - lo) * k_blk
+        flat_bvi[i, :n_v] = np.arange(lo * k_blk, hi * k_blk, dtype=np.int32)
 
     return ShardedSchedule(
         seg_win=jnp.asarray(sw), seg_meta=jnp.asarray(sm),
         blk_id=jnp.asarray(bid), blk_win=jnp.asarray(bwin),
         row_own=jnp.asarray(row_own), blk_own=jnp.asarray(blk_own),
         num_devices=d, num_windows=w, split_blk=schedule.split_blk,
-        window_split=window_split, num_blocks=schedule.num_blocks)
+        window_split=window_split, num_blocks=schedule.num_blocks,
+        bseg_win=jnp.asarray(bsw), bseg_meta=jnp.asarray(bsm),
+        brow_idx=jnp.asarray(bri), bblk_id=jnp.asarray(bbi),
+        bblk_win=jnp.asarray(bbw), bval_idx=jnp.asarray(bvi),
+        n_batches=nb)
 
 
 def sharded_schedule(blocked: BlockedMEBCRS, num_devices: int, *,
                      split_blk: int = 1, window_split: bool = True,
-                     n_blk: int = 128,
+                     n_blk: int = 128, n_batches: int = 1,
                      schedule: Optional[Schedule] = None) -> ShardedSchedule:
     """Memoized :func:`partition_schedule` (per ``(split_blk, D,
     window_split, n_blk)``), host-side like ``BlockedMEBCRS.schedule``.
@@ -294,17 +426,18 @@ def sharded_schedule(blocked: BlockedMEBCRS, num_devices: int, *,
     if schedule is not None:
         return partition_schedule(blocked, schedule, num_devices,
                                   split_blk=split_blk,
-                                  window_split=window_split, n_blk=n_blk)
+                                  window_split=window_split, n_blk=n_blk,
+                                  n_batches=n_batches)
     memo = getattr(blocked, "_shard_plans", None)
     if memo is None:
         memo = {}
         object.__setattr__(blocked, "_shard_plans", memo)
-    key = (split_blk, num_devices, window_split, n_blk)
+    key = (split_blk, num_devices, window_split, n_blk, n_batches)
     if key not in memo:
         memo[key] = partition_schedule(blocked, None, num_devices,
                                        split_blk=split_blk,
                                        window_split=window_split,
-                                       n_blk=n_blk)
+                                       n_blk=n_blk, n_batches=n_batches)
     return memo[key]
 
 
@@ -329,6 +462,48 @@ def device_balance(blocked: BlockedMEBCRS, num_devices: int, *,
     mean = float(np.mean(per_dev)) if per_dev else 0.0
     return {"costs": per_dev,
             "max_over_mean": (max(per_dev) / mean) if mean > 0 else 1.0}
+
+
+def batch_costs(blocked: BlockedMEBCRS, num_devices: int, n_batches: int, *,
+                schedule: Optional[Schedule] = None, split_blk: int = 1,
+                window_split: bool = True, n_blk: int = 128) -> dict:
+    """Per-(device, batch) cost/row statistics of the overlap partition.
+
+    Reapplies exactly the cuts :func:`partition_schedule` uses (device
+    cuts, then per-device batch sub-cuts, same :func:`segment_costs`
+    model) and returns host-side numpy:
+
+      ``costs``  (D, NB) float  bytes-equivalent compute cost per batch
+      ``rows``   (D, NB) int    output rows the batch's windows own —
+                                what the ring buffer for that batch
+                                carries (``benchmarks.common.
+                                overlap_makespan`` prices the hops from
+                                this)
+
+    Shared-model invariant: ``costs.sum(axis=1)`` equals
+    :func:`device_balance`'s per-device totals.
+    """
+    if schedule is None:
+        schedule = blocked.schedule(split_blk)
+    costs = segment_costs(blocked, schedule, n_blk=n_blk)
+    seg_win = np.asarray(schedule.seg_win)
+    v = blocked.vector_size
+    m = blocked.shape[0]
+    cuts = _cut_points(costs, num_devices,
+                       _allowed_cuts(seg_win, window_split))
+    c = np.zeros((num_devices, n_batches), np.float64)
+    r = np.zeros((num_devices, n_batches), np.int64)
+    for dev in range(num_devices):
+        lo, hi = int(cuts[dev]), int(cuts[dev + 1])
+        bcuts = lo + _cut_points(
+            costs[lo:hi], n_batches,
+            _allowed_cuts(seg_win[lo:hi], window_split))
+        for b in range(n_batches):
+            blo, bhi = int(bcuts[b]), int(bcuts[b + 1])
+            c[dev, b] = float(costs[blo:bhi].sum())
+            if bhi > blo:
+                r[dev, b] = _range_rows(seg_win[blo:bhi], v, m).size
+    return {"costs": c, "rows": r}
 
 
 # ---------------------------------------------------------------------------

@@ -68,7 +68,13 @@ _DEFAULT_CACHE_PATH = os.path.join(
 # was timed at, DESIGN.md §13) and the sweep key a ``|p...`` candidate
 # suffix — a v3 winner carries no precision and must not satisfy a
 # precision-swept lookup, so v3 files (and older) are discarded wholesale.
-SCHEMA_VERSION = 4
+# v5: configs gained ``overlap_batches`` (the sharded-overlap pipeline
+# depth the winner was timed at, DESIGN.md §14; 0 = no overlap axis) and
+# the sweep key an ``|o...`` candidate suffix plus the mesh's data-axis
+# size when the axis is swept — a v4 winner carries no pipeline depth and
+# must not satisfy an overlap-swept lookup, so v4 files (and older) are
+# discarded wholesale.
+SCHEMA_VERSION = 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +86,10 @@ class TuneConfig:
     (DESIGN.md §11).  ``precision`` is the mixed-precision level the
     winner was timed at (DESIGN.md §13); ``"fp32"`` — the default when the
     sweep has no precision axis — means the operands' native dtypes.
+    ``overlap_batches`` is the sharded-overlap pipeline depth
+    (DESIGN.md §14): 0 — the default when the sweep has no overlap axis —
+    means the single-device kernels; ``>= 1`` means the winner ran
+    ``pallas_sharded_overlap`` with that many segment batches per device.
     """
 
     k_blk: int
@@ -87,6 +97,7 @@ class TuneConfig:
     median_ms: float
     split_blk: int = 0
     precision: str = "fp32"
+    overlap_batches: int = 0
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
@@ -96,7 +107,8 @@ class TuneConfig:
         return cls(k_blk=int(d["k_blk"]), n_blk=int(d["n_blk"]),
                    median_ms=float(d["median_ms"]),
                    split_blk=int(d.get("split_blk", 0)),
-                   precision=str(d.get("precision", "fp32")))
+                   precision=str(d.get("precision", "fp32")),
+                   overlap_batches=int(d.get("overlap_batches", 0)))
 
 
 def _log2_bucket(x: float) -> int:
@@ -211,7 +223,8 @@ def _median_ms(fn, reps: int, warmup: int = 1) -> float:
 
 def _sweep(fmt: MEBCRS, run_cfg, minor: int, key: str, *,
            k_blks: Sequence[int], n_blks: Sequence[int],
-           split_blks: Sequence[int], precisions: Sequence[str], reps: int,
+           split_blks: Sequence[int], precisions: Sequence[str],
+           overlap_batches: Sequence[int] = (0,), reps: int,
            cache: Optional[AutotuneCache]) -> TuneConfig:
     from repro.core.quantize import validate_precision
 
@@ -220,11 +233,13 @@ def _sweep(fmt: MEBCRS, run_cfg, minor: int, key: str, *,
     cache = cache if cache is not None else default_cache()
     # The candidate grid is part of the key: a sweep over (8, 16) must not
     # satisfy a later request for (32,) — the winner would be a config the
-    # caller explicitly excluded.  Ditto the precision candidates (v4).
+    # caller explicitly excluded.  Ditto the precision candidates (v4) and
+    # the overlap-pipeline candidates (v5).
     key = (f"{key}|k{','.join(map(str, sorted(k_blks)))}"
            f"|nb{','.join(map(str, sorted(n_blks)))}"
            f"|s{','.join(map(str, sorted(split_blks)))}"
-           f"|p{','.join(sorted(precisions))}")
+           f"|p{','.join(sorted(precisions))}"
+           f"|o{','.join(map(str, sorted(overlap_batches)))}")
     hit = cache.get(key)
     if hit is not None:
         return hit
@@ -234,18 +249,21 @@ def _sweep(fmt: MEBCRS, run_cfg, minor: int, key: str, *,
         blocked = block_format(fmt, k_blk)
         for split in split_blks:
             for prec in precisions:
-                seen = set()
-                for n_blk in n_blks:
-                    eff = min(n_blk, max(minor, 1))
-                    if eff in seen:
-                        continue
-                    seen.add(eff)
-                    ms = _median_ms(
-                        lambda: run_cfg(blocked, eff, split, prec), reps=reps)
-                    if best is None or ms < best.median_ms:
-                        best = TuneConfig(k_blk=k_blk, n_blk=eff,
-                                          median_ms=ms, split_blk=split,
-                                          precision=prec)
+                for ob in overlap_batches:
+                    seen = set()
+                    for n_blk in n_blks:
+                        eff = min(n_blk, max(minor, 1))
+                        if eff in seen:
+                            continue
+                        seen.add(eff)
+                        ms = _median_ms(
+                            lambda: run_cfg(blocked, eff, split, prec, ob),
+                            reps=reps)
+                        if best is None or ms < best.median_ms:
+                            best = TuneConfig(k_blk=k_blk, n_blk=eff,
+                                              median_ms=ms, split_blk=split,
+                                              precision=prec,
+                                              overlap_batches=ob)
     assert best is not None
     cache.put(key, best)
     return best
@@ -256,6 +274,7 @@ def tune_spmm(fmt: MEBCRS, b_dense: jax.Array, *,
               n_blks: Sequence[int] = DEFAULT_N_BLKS,
               split_blks: Sequence[int] = DEFAULT_SPLIT_BLKS,
               precisions: Sequence[str] = ("fp32",),
+              overlap_batches: Sequence[int] = (0,), mesh=None,
               interpret: bool = True, reps: int = 3,
               cache: Optional[AutotuneCache] = None) -> TuneConfig:
     """Pick (k_blk, n_blk, split_blk) for SpMM on this matrix class.
@@ -272,6 +291,12 @@ def tune_spmm(fmt: MEBCRS, b_dense: jax.Array, *,
     timed at each level and the winner's level rides in
     ``TuneConfig.precision`` (``"fp32"`` candidates run the operands'
     native dtypes, so a no-axis sweep behaves exactly as before v4).
+    ``overlap_batches`` adds the sharded-overlap pipeline axis
+    (DESIGN.md §14, v5): candidates ``>= 1`` time
+    ``pallas_sharded_overlap`` at that depth over ``mesh`` (required for
+    them; its data-axis size joins the cache key — a depth tuned on 4
+    devices must not satisfy an 8-device lookup), while ``0`` keeps the
+    single-device kernels, so a no-axis sweep behaves exactly as before.
     """
     from .spmm_pallas import (
         spmm_pallas,
@@ -279,10 +304,23 @@ def tune_spmm(fmt: MEBCRS, b_dense: jax.Array, *,
         spmm_pallas_batched,
     )
 
+    if any(ob > 0 for ob in overlap_batches):
+        from repro.distributed.sparse_shard import _resolve_mesh
+
+        mesh = _resolve_mesh(mesh)
     batch = b_dense.shape[0] if b_dense.ndim == 3 else 1
 
-    def run(blocked, n_blk, split, prec):
+    def run(blocked, n_blk, split, prec, ob):
         prec = None if prec == "fp32" else prec   # fp32 = native dtypes
+        if ob:
+            from repro.distributed.sparse_shard_overlap import (
+                spmm_sharded_overlap,
+            )
+
+            return spmm_sharded_overlap(blocked, b_dense, mesh=mesh,
+                                        split_blk=split, n_blk=n_blk,
+                                        n_batches=ob, interpret=interpret,
+                                        precision=prec)
         if split:
             return spmm_pallas_balanced(blocked, b_dense, split_blk=split,
                                         n_blk=n_blk, interpret=interpret,
@@ -296,9 +334,12 @@ def tune_spmm(fmt: MEBCRS, b_dense: jax.Array, *,
     n = b_dense.shape[-1]
     key = matrix_stats_key(fmt, n, "spmm", interpret=interpret,
                            dtype=b_dense.dtype, batch=batch)
+    if any(ob > 0 for ob in overlap_batches):
+        key = f"{key}|d{mesh.shape['data']}"
     return _sweep(
         fmt, run, n, key, k_blks=k_blks, n_blks=n_blks,
-        split_blks=split_blks, precisions=precisions, reps=reps, cache=cache,
+        split_blks=split_blks, precisions=precisions,
+        overlap_batches=overlap_batches, reps=reps, cache=cache,
     )
 
 
@@ -326,7 +367,7 @@ def tune_sddmm(fmt: MEBCRS, q: jax.Array, k: jax.Array, *,
 
     batch = next((x.shape[0] for x in (q, k) if x.ndim == 3), 1)
 
-    def run(blocked, f_blk, split, prec):
+    def run(blocked, f_blk, split, prec, _ob):
         prec = None if prec == "fp32" else prec
         if split:
             return sddmm_pallas_balanced(blocked, q, k, split_blk=split,
@@ -371,7 +412,7 @@ def tune_attention(fmt: MEBCRS, q: jax.Array, k: jax.Array, v: jax.Array, *,
     key = matrix_stats_key(fmt, d, "attn", interpret=interpret,
                            dtype=q.dtype, batch=batch)
 
-    def run(blocked, _dv, split, prec):
+    def run(blocked, _dv, split, prec, _ob):
         prec = None if prec == "fp32" else prec
         if split:
             return attention_pallas_balanced(blocked, q, k, v,
