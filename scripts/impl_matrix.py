@@ -23,6 +23,22 @@ FLAGS = (
 )
 
 
+def _fallback_cell(name: str, entries) -> str:
+    """Next ladder rung per op (DESIGN.md §15).  One shared rung renders
+    bare; per-op differences render ``op:rung``; terminal/no-fallback
+    impls render a dash."""
+    from repro.core import dispatch
+
+    fbs = {op: dispatch.fallback_for(op, name) for op in entries}
+    uniq = {fb for fb in fbs.values() if fb is not None}
+    if not uniq:
+        return "—"
+    if len(uniq) == 1 and all(fb is not None for fb in fbs.values()):
+        return f"`{uniq.pop()}`"
+    return " ".join(f"{op}:`{fb}`" if fb else f"{op}:—"
+                    for op, fb in fbs.items())
+
+
 def _precision_cell(entries) -> str:
     """Union of precision levels over the ops an impl serves, in canonical
     order (DESIGN.md §13) — fp32-only renders as a dash (the default)."""
@@ -38,7 +54,7 @@ def impl_matrix() -> str:
 
     names = sorted({n for op in OPS for n in dispatch.impls(op)})
     header = (["impl"] + [f"{op}" for op in OPS]
-              + [lbl for _, lbl in FLAGS] + ["precision"])
+              + [lbl for _, lbl in FLAGS] + ["precision", "fallback"])
     lines = ["| " + " | ".join(header) + " |",
              "|" + "|".join("---" for _ in header) + "|"]
     for name in names:
@@ -51,6 +67,7 @@ def impl_matrix() -> str:
             row.append("✓" if vals == {True} else
                        ("—" if vals == {False} else "mixed"))
         row.append(_precision_cell(entries))
+        row.append(_fallback_cell(name, entries))
         lines.append("| " + " | ".join(row) + " |")
     return "\n".join(lines)
 

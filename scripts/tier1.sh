@@ -19,6 +19,20 @@ fi
 
 python -m pytest -x -q "$@"
 
+# Hardened-runtime gate (DESIGN.md §15, full runs only): re-run the
+# format/op/dispatch tests with ambient full validation on every
+# constructor and dispatch (REPRO_CHECK=full must be behavior-preserving
+# on healthy inputs), then smoke the fault-injection harness CLI in both
+# strictness modes.
+if [[ $# -eq 0 ]]; then
+  REPRO_CHECK=full python -m pytest -x -q \
+    tests/test_format.py tests/test_sparse_ops.py tests/test_dispatch.py \
+    tests/test_validate.py
+  python -m repro.testing.faults --op spmm --impl blocked --strict
+  python -m repro.testing.faults --op spmm --impl pallas --interpret \
+    --no-strict
+fi
+
 # Gradient-path smoke (full runs only): two training steps through the
 # autotuned Pallas impl must produce a finite, decreasing loss — the
 # backward runs the transpose-SpMM/SDDMM duality (DESIGN.md §9).
@@ -36,8 +50,11 @@ if [[ $# -eq 0 && "${TIER1_SMOKE:-1}" == "1" ]]; then
   # matrices through the balanced-vs-window comparison; the balanced
   # schedule must cut the idle-cell-adjusted cost >= 1.3x on every
   # skew >= 1.5 matrix (bitwise kernel parity is asserted inside the
-  # bench itself).
-  python -m benchmarks.run --op spmm --skewed --scale 0.002
+  # bench itself).  REPRO_CHECK=full doubles as the §15 full-validation
+  # pass over the bench suite: every constructor and dispatch in the
+  # bench audits its formats/schedules host-side (bench numbers are
+  # cost-model floors, not wall-clock, so the audit does not skew them).
+  REPRO_CHECK=full python -m benchmarks.run --op spmm --skewed --scale 0.002
   python - <<'EOF'
 import json
 with open("BENCH_spmm.json") as f:

@@ -1,8 +1,19 @@
 """FlashSparse core: ME-BCRS format, SpMM/SDDMM operators (with the
 unified dispatch registry and custom_vjp autodiff layer), redundancy
-metrics."""
+metrics, and the structural validation layer (DESIGN.md §15)."""
 
 from . import dispatch
+from . import validate
+from .validate import (
+    ValidationError,
+    ValidationWarning,
+    check_level,
+    checking,
+    validate_blocked,
+    validate_format,
+    validate_schedule,
+    validate_sharded,
+)
 from .autodiff import ADPlan, ad_plan, attention_ad, sddmm_ad, spmm_ad
 from .format import (
     MEBCRS,
@@ -19,13 +30,23 @@ from .format import (
     window_skew,
 )
 from .metrics import (
+    counters,
     data_access_bytes,
     mma_count,
     padded_flops,
+    record_counter,
+    reset_counters,
     summarize,
     zeros_in_nonzero_vectors,
 )
-from .sddmm import sddmm, sddmm_blocked, sddmm_coo, sddmm_dense_ref, with_values
+from .sddmm import (
+    attention,
+    sddmm,
+    sddmm_blocked,
+    sddmm_coo,
+    sddmm_dense_ref,
+    with_values,
+)
 from .spmm import spmm, spmm_blocked, spmm_coo_segment, spmm_dense_ref
 
 __all__ = [
@@ -55,10 +76,23 @@ __all__ = [
     "sddmm_blocked",
     "sddmm_coo",
     "sddmm_dense_ref",
+    "attention",
     "with_values",
     "mma_count",
     "zeros_in_nonzero_vectors",
     "data_access_bytes",
     "padded_flops",
     "summarize",
+    "counters",
+    "record_counter",
+    "reset_counters",
+    "validate",
+    "ValidationError",
+    "ValidationWarning",
+    "check_level",
+    "checking",
+    "validate_format",
+    "validate_blocked",
+    "validate_schedule",
+    "validate_sharded",
 ]

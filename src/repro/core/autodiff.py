@@ -106,6 +106,11 @@ class ADPlan:
     # sparse values per K-block *in trace* (fp32 masters, straight-through
     # gradients) while every other op runs the bf16 dense level.
     precision: Optional[str] = None
+    # Nonfinite rescue (DESIGN.md §15): with a bf16/int8 plan, re-run the
+    # forward SpMM at fp32 (lax.cond) when the narrow pass yields NaN/Inf
+    # — the guarded forward returns fp32, the backward stays the plain
+    # straight-through duality (it reads the fp32 masters regardless).
+    guard_nonfinite: bool = False
 
     @property
     def vals(self) -> jax.Array:
@@ -140,18 +145,21 @@ class ADPlan:
                  self.bwd_sched, self.fwd_part, self.bwd_part,
                  self.fwd_part_wa),
                 (self.impl, self.n_blk, self.n_blk_t, self.f_blk, self.mesh,
-                 self.precision, self.overlap_batches))
+                 self.precision, self.overlap_batches,
+                 self.guard_nonfinite))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         (fwd, bwd, perm, fwd_sched, bwd_sched, fwd_part, bwd_part,
          fwd_part_wa) = leaves
-        impl, n_blk, n_blk_t, f_blk, mesh, precision, overlap_batches = aux
+        (impl, n_blk, n_blk_t, f_blk, mesh, precision, overlap_batches,
+         guard_nonfinite) = aux
         return cls(fwd=fwd, bwd=bwd, perm=perm, impl=impl, n_blk=n_blk,
                    n_blk_t=n_blk_t, f_blk=f_blk, fwd_sched=fwd_sched,
                    bwd_sched=bwd_sched, fwd_part=fwd_part,
                    bwd_part=bwd_part, fwd_part_wa=fwd_part_wa, mesh=mesh,
-                   precision=precision, overlap_batches=overlap_batches)
+                   precision=precision, overlap_batches=overlap_batches,
+                   guard_nonfinite=guard_nonfinite)
 
 
 def _blocked_perm(blocked_a: BlockedMEBCRS,
@@ -188,7 +196,8 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
             n_blk: int = 128, f_blk: int = 128, split_blk: int = 1,
             n_example: int = 64, interpret: Optional[bool] = None,
             cache=None, mesh=None, overlap_batches: Optional[int] = None,
-            precision: Optional[str] = None) -> ADPlan:
+            precision: Optional[str] = None,
+            guard_nonfinite: bool = False) -> ADPlan:
     """Build (and memoize on ``fmt``) the differentiable-op plan.
 
     Host-side precompute, like ``block_format`` — call outside ``jit``.
@@ -220,10 +229,18 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
     device (default 2; 1 disables pipelining), so every traced call —
     forward, both duality backward ops, and the attention recompute —
     replaces the bulk psum with the double-buffered ``ppermute`` ring.
+
+    ``guard_nonfinite=True`` (DESIGN.md §15) arms the nonfinite rescue on
+    a bf16/int8 plan: every traced forward SpMM checks its output and
+    re-runs at fp32 via ``lax.cond`` when the narrow pass produced
+    NaN/Inf, returning fp32.  Gradients stay the plain straight-through
+    duality (the backward reads the fp32 masters regardless of which
+    branch ran).  A no-op for fp32/None plans.
     """
     from .quantize import validate_precision
 
     validate_precision(precision)
+    guard_nonfinite = bool(guard_nonfinite) and precision in ("bf16", "int8")
     entry = _dispatch.require("spmm", impl, differentiable=True,
                               precision=precision)
     if precision is not None:
@@ -260,7 +277,7 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
         interp = ops._resolve_interpret(interpret)
         cache_tag = getattr(cache, "path", None) if cache is not None else None
     key = (impl, k_blk, n_blk, f_blk, int(split_blk), int(n_example), interp,
-           cache_tag, mesh, precision, int(overlap_batches))
+           cache_tag, mesh, precision, int(overlap_batches), guard_nonfinite)
     memo = getattr(fmt, "_ad_plans", None)
     if memo is None:
         memo = {}
@@ -337,7 +354,8 @@ def ad_plan(fmt: MEBCRS, *, impl: str = "blocked", k_blk: int = 8,
                   bwd_sched=blocked_t.schedule(split_t) if want_t else None,
                   fwd_part=fwd_part, bwd_part=bwd_part,
                   fwd_part_wa=fwd_part_wa, mesh=mesh, precision=precision,
-                  overlap_batches=overlap_batches)
+                  overlap_batches=overlap_batches,
+                  guard_nonfinite=guard_nonfinite)
     memo[key] = plan
     return plan
 
@@ -454,14 +472,29 @@ def _run_sddmm(impl, interpret, plan: ADPlan, q, k, *, precision=None):
 def _spmm_ad(impl, interpret, plan: ADPlan, vals, b):
     vals_m = vals * plan.fwd.mask  # masked entries are structural zeros
     vb, bb = vals.ndim == 3, b.ndim == 3
-    if not (vb or bb) or _is_pallas(impl):
-        return _run_spmm(impl, interpret, plan, vals_m, b, transposed=False,
-                         precision=plan.precision)
-    entry = _dispatch.get("spmm", _exec_impl(impl))
-    run = lambda v_, b_: _run_spmm(impl, interpret, plan, v_, b_,
-                                   transposed=False,
-                                   precision=plan.precision)
-    return _map_slices(entry, run, [(vals_m, vb), (b, bb)], ())
+
+    def fwd(precision):
+        if not (vb or bb) or _is_pallas(impl):
+            return _run_spmm(impl, interpret, plan, vals_m, b,
+                             transposed=False, precision=precision)
+        entry = _dispatch.get("spmm", _exec_impl(impl))
+        run = lambda v_, b_: _run_spmm(impl, interpret, plan, v_, b_,
+                                       transposed=False, precision=precision)
+        return _map_slices(entry, run, [(vals_m, vb), (b, bb)], ())
+
+    out = fwd(plan.precision)
+    if not plan.guard_nonfinite:
+        return out
+    # Nonfinite rescue (DESIGN.md §15): guarded output is always fp32 —
+    # both lax.cond branches must share a dtype, and casting the fp32
+    # rescue back down would re-overflow the very values it saved.
+    from .metrics import record_counter
+
+    ok = jnp.all(jnp.isfinite(out))
+    record_counter("guard_nonfinite_rerun",
+                   (1 - ok.astype(jnp.int32)))
+    return jax.lax.cond(ok, lambda: out.astype(jnp.float32),
+                        lambda: fwd("fp32").astype(jnp.float32))
 
 
 def _spmm_ad_fwd(impl, interpret, plan, vals, b):

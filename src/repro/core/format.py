@@ -31,6 +31,7 @@ arithmetically — here via the ``block_win`` scalar-prefetch metadata).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Optional, Tuple
 
@@ -236,15 +237,21 @@ class Schedule:
         return cls(*leaves, split_blk=split_blk, num_blocks=num_blocks)
 
 
-def build_schedule(blocked: BlockedMEBCRS, split_blk: int = 1) -> Schedule:
+def build_schedule(blocked: BlockedMEBCRS, split_blk: int = 1,
+                   check: Optional[str] = None) -> Schedule:
     """Split windows into ≤ ``split_blk``-block segments and elide all work
     for empty windows (they keep one zero-length store-only segment).
 
     ``split_blk = 0`` disables splitting — one segment per window, the
     window-parallel work assignment expressed in schedule form (useful as
     the autotuner's degenerate candidate).  Host-side numpy, like
-    :func:`block_format`.
+    :func:`block_format`.  ``check`` audits both the input blocked view
+    and the built schedule (``None`` → ambient level, DESIGN.md §15).
     """
+    from . import validate as _validate
+
+    level = _validate.resolve_check(check)
+    _validate.validate_blocked(blocked, check=level)
     if split_blk < 0:
         raise ValueError(f"split_blk must be >= 0, got {split_blk}")
     wp = np.asarray(blocked.win_ptr).astype(np.int64)
@@ -275,14 +282,14 @@ def build_schedule(blocked: BlockedMEBCRS, split_blk: int = 1) -> Schedule:
     blk_win = np.repeat(np.arange(w, dtype=np.int32),
                         counts).astype(np.int32)
 
-    return Schedule(
+    return _validate.validate_schedule(Schedule(
         seg_win=jnp.asarray(seg_win.astype(np.int32)),
         seg_meta=jnp.asarray(seg_meta),
         blk_id=jnp.asarray(blk_id),
         blk_win=jnp.asarray(blk_win),
         split_blk=split_blk,
         num_blocks=int(wp[-1]),
-    )
+    ), blocked=blocked, check=level)
 
 
 def window_skew(fmt) -> float:
@@ -317,15 +324,48 @@ def from_coo(
     shape: Tuple[int, int],
     vector_size: int = 8,
     dtype=jnp.float32,
+    *,
+    duplicates: str = "sum",
+    check: Optional[str] = None,
 ) -> MEBCRS:
-    """Build ME-BCRS from COO triplets (duplicates are summed)."""
+    """Build ME-BCRS from COO triplets.
+
+    ``duplicates`` controls repeated ``(row, col)`` coordinates:
+    ``"sum"`` coalesces them (the sparse-algebra convention; under
+    ``check="full"`` a :class:`~repro.core.validate.ValidationWarning`
+    reports how many were merged), ``"error"`` raises a named
+    :class:`~repro.core.validate.ValidationError` — the right setting when
+    the triplets come from an external producer where duplicates signal a
+    corrupted stream rather than an incremental build.  ``check`` follows
+    :func:`repro.core.validate.resolve_check` (``None`` → ambient level);
+    the constructed format is audited before it is returned.
+    """
+    from . import validate as _validate
+
+    if duplicates not in ("sum", "error"):
+        raise ValueError(f"duplicates must be 'sum' or 'error', "
+                         f"got {duplicates!r}")
+    level = _validate.resolve_check(check)
     m, k = shape
     v = vector_size
     rows = np.asarray(rows, dtype=np.int64)
     cols = np.asarray(cols, dtype=np.int64)
     vals = np.asarray(vals)
-    if rows.size and (rows.max() >= m or cols.max() >= k):
-        raise ValueError("COO indices out of bounds for shape")
+    if rows.size and (rows.min() < 0 or cols.min() < 0
+                      or rows.max() >= m or cols.max() >= k):
+        raise _validate.ValidationError(
+            "coo-in-bounds", f"COO indices out of bounds for shape {shape}")
+    if rows.size and (duplicates == "error" or level == "full"):
+        elem_key = rows * k + cols
+        n_dup = elem_key.size - np.unique(elem_key).size
+        if n_dup:
+            if duplicates == "error":
+                raise _validate.ValidationError(
+                    "duplicate-coords",
+                    f"{n_dup} duplicate COO coordinate(s)")
+            warnings.warn(_validate.ValidationWarning(
+                f"[duplicate-coords] coalesced {n_dup} duplicate COO "
+                f"coordinate(s) by summation"), stacklevel=2)
 
     w = -(-m // v)
     win = rows // v
@@ -349,14 +389,14 @@ def from_coo(
     np.add.at(row_pointers, vec_win + 1, 1)
     row_pointers = np.cumsum(row_pointers, dtype=np.int32)
 
-    return MEBCRS(
+    return _validate.validate_format(MEBCRS(
         row_pointers=jnp.asarray(row_pointers),
         column_indices=jnp.asarray(vec_col),
         values=jnp.asarray(values, dtype=dtype),
         mask=jnp.asarray(maskf),
         shape=(m, k),
         vector_size=v,
-    )
+    ), check=level)
 
 
 def from_dense(a: np.ndarray, vector_size: int = 8, dtype=None) -> MEBCRS:
@@ -410,15 +450,25 @@ def to_coo(fmt) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     return rows, cols, vals
 
 
-def block_format(fmt: MEBCRS, k_blk: int = 8) -> BlockedMEBCRS:
+def block_format(fmt: MEBCRS, k_blk: int = 8,
+                 check: Optional[str] = None) -> BlockedMEBCRS:
     """Pad each window's vectors to a multiple of ``k_blk`` → blocked view.
 
     This is where the paper's "last TC block residue" lives: padding columns
     get value 0 / mask False / column 0, so their MMA contribution vanishes
     (same arithmetic-elimination trick as the paper's modulo residue test,
     but resolved at format-translation time so the kernel's scalar prefetch
-    stays branch-free).
+    stays branch-free).  ``check`` audits the input format and the blocked
+    view (``None`` → ambient level, DESIGN.md §15).
     """
+    from . import validate as _validate
+
+    level = _validate.resolve_check(check)
+    _validate.validate_format(fmt, check=level)
+    if not (isinstance(k_blk, int) and 1 <= k_blk <= 4096):
+        raise _validate.ValidationError(
+            "block-config", f"k_blk={k_blk!r} outside the sane range "
+            "[1, 4096]")
     rp = np.asarray(fmt.row_pointers)
     counts = np.diff(rp)
     w = fmt.num_windows
@@ -459,7 +509,7 @@ def block_format(fmt: MEBCRS, k_blk: int = 8) -> BlockedMEBCRS:
     win_ptr = np.zeros((w + 1,), dtype=np.int32)
     win_ptr[1:] = np.cumsum(nblk_per_win)
 
-    return BlockedMEBCRS(
+    return _validate.validate_blocked(BlockedMEBCRS(
         vals=jnp.asarray(vals),
         cols=jnp.asarray(cols),
         mask=jnp.asarray(mask),
@@ -468,7 +518,7 @@ def block_format(fmt: MEBCRS, k_blk: int = 8) -> BlockedMEBCRS:
         shape=fmt.shape,
         vector_size=v,
         k_blk=k_blk,
-    )
+    ), check=level)
 
 
 # ---------------------------------------------------------------------------

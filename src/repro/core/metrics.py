@@ -1,17 +1,29 @@
-"""Redundancy metrics reproducing the paper's analysis artifacts.
+"""Redundancy metrics reproducing the paper's analysis artifacts, plus
+runtime robustness counters (DESIGN.md §15).
+
+Paper metrics (host numpy, derived from the ME-BCRS structure alone, so
+exact, not sampled):
 
   * :func:`zeros_in_nonzero_vectors` — Table 2
   * :func:`mma_count`                — Fig. 1
   * :func:`data_access_bytes`        — Fig. 12 cost model
   * :func:`padded_flops`             — MXU-side redundancy (TPU translation)
 
-All metrics are derived from the ME-BCRS structure alone (host numpy), so
-they are exact, not sampled.
+Runtime counters (process-global, thread-safe) surface the hardened
+runtime's degradation events — int8 saturation clips
+(:func:`repro.core.quantize.quantize_blocked` with an external scale),
+dispatch fallbacks, fp32 nonfinite re-runs — without a metrics server:
+:func:`record_counter` accepts concrete ints *or traced arrays* (the
+latter land through ``jax.debug.callback`` at run time, so jitted
+quantization still counts), :func:`counters` snapshots,
+:func:`reset_counters` clears.
 """
 
 from __future__ import annotations
 
-from typing import Dict
+import threading
+from functools import partial
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -23,7 +35,52 @@ __all__ = [
     "data_access_bytes",
     "padded_flops",
     "summarize",
+    "record_counter",
+    "counters",
+    "reset_counters",
 ]
+
+
+# ------------------------------------------------------ runtime counters --
+
+_counters: Dict[str, int] = {}
+_counters_lock = threading.Lock()
+
+
+def _add_counter(name: str, n) -> None:
+    with _counters_lock:
+        _counters[name] = _counters.get(name, 0) + int(n)
+
+
+def record_counter(name: str, n=1) -> None:
+    """Add ``n`` to the process-global counter ``name``.
+
+    ``n`` may be a concrete number or a traced 0-d array: under a tracer
+    the increment is attached via ``jax.debug.callback`` and lands when
+    the compiled computation actually runs (once per execution, not per
+    trace).
+    """
+    import jax
+
+    if isinstance(n, jax.core.Tracer):
+        jax.debug.callback(partial(_add_counter, name), n)
+    else:
+        _add_counter(name, n)
+
+
+def counters() -> Dict[str, int]:
+    """Snapshot of all runtime counters."""
+    with _counters_lock:
+        return dict(_counters)
+
+
+def reset_counters(name: Optional[str] = None) -> None:
+    """Clear one counter, or all of them (``name=None``)."""
+    with _counters_lock:
+        if name is None:
+            _counters.clear()
+        else:
+            _counters.pop(name, None)
 
 # MMA operand shapes (paper Table 1): (m, n, k)
 MMA_SHAPES = {

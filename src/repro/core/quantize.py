@@ -100,25 +100,46 @@ def cast_precision(precision: Optional[str], *operands):
 # ----------------------------------------------------------------- int8 ----
 
 
-def quantize_blocked(x: jax.Array, block: int):
-    """Per-block absmax int8 quantization of ``x`` (any shape).
+def quantize_blocked(x: jax.Array, block: int, scale=None):
+    """Per-block int8 quantization of ``x`` (any shape), saturating.
 
     Flattens, zero-pads to a multiple of ``block``, and quantizes each
-    ``block``-element group against its own absmax:
+    ``block``-element group:
 
-      scale = max(absmax, 1e-12) / 127
+      scale = max(absmax, 1e-12) / 127     (default, per group)
       q     = clip(round(x / scale), -127, 127)  (int8)
 
     Returns ``(q (NBLK, block) int8, scale (NBLK,) fp32)``.  The absolute
     round-trip error is bounded by ``scale / 2`` per element.
+
+    With the default absmax ``scale`` the clip can never engage (every
+    ``|x/scale|`` ≤ 127 by construction).  An explicit ``scale`` — a
+    scalar or per-group ``(NBLK,)`` array, the fixed-scale regime of
+    calibrated/stale scales shared across steps or replicas — CAN
+    overflow the int8 range; the quantizer then **saturates** at ±127
+    (never integer wraparound) and records the number of clipped elements
+    on the ``int8_clip`` runtime counter
+    (:func:`repro.core.metrics.record_counter` — jit-safe, counts land at
+    execution time).
     """
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % block
     xp = jnp.pad(flat, (0, pad)).reshape(-1, block)
-    scale = jnp.maximum(jnp.max(jnp.abs(xp), axis=-1, keepdims=True),
-                        1e-12) / 127.0
-    q = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
-    return q, scale[:, 0].astype(jnp.float32)
+    if scale is None:
+        sc = jnp.maximum(jnp.max(jnp.abs(xp), axis=-1, keepdims=True),
+                         1e-12) / 127.0
+        q = jnp.clip(jnp.round(xp / sc), -127, 127).astype(jnp.int8)
+    else:
+        from .metrics import record_counter
+
+        sc = jnp.asarray(scale, jnp.float32)
+        sc = jnp.broadcast_to(sc.reshape(-1, 1) if sc.ndim else sc,
+                              (xp.shape[0], 1))
+        rounded = jnp.round(xp / sc)
+        n_clip = jnp.sum(jnp.abs(rounded) > 127)
+        record_counter("int8_clip", n_clip)
+        q = jnp.clip(rounded, -127, 127).astype(jnp.int8)
+    return q, sc[:, 0].astype(jnp.float32)
 
 
 def dequantize_blocked(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
@@ -130,7 +151,7 @@ def dequantize_blocked(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
     return x[:size].reshape(shape)
 
 
-def quantize_block_values(vals: jax.Array, k_blk: int):
+def quantize_block_values(vals: jax.Array, k_blk: int, scales=None):
     """Quantize blocked ME-BCRS values ``(NNZP, V)`` per K-block.
 
     Each K-block owns ``k_blk`` consecutive vectors → one quantization
@@ -138,15 +159,17 @@ def quantize_block_values(vals: jax.Array, k_blk: int):
     scales (NB,) fp32)`` with ``NB = NNZP / k_blk`` — the scale array the
     kernels scalar-prefetch.  Zero-padding vectors inside a K-block keep
     quantizing to exact 0, preserving ME-BCRS's branch-free residue
-    handling at int8.
+    handling at int8.  An explicit ``scales`` (scalar or ``(NB,)``) runs
+    the saturating fixed-scale path of :func:`quantize_blocked`.
     """
     if vals.ndim != 2:
         raise ValueError(
             "per-K-block quantization expects 2-D values (NNZP, V); "
             f"got shape {vals.shape} — per-head quantized values are not "
             "supported (quantize before stacking heads)")
-    q, scales = quantize_blocked(vals, k_blk * vals.shape[-1])
-    return q.reshape(vals.shape), scales
+    q, out_scales = quantize_blocked(vals, k_blk * vals.shape[-1],
+                                     scale=scales)
+    return q.reshape(vals.shape), out_scales
 
 
 def dequantize_block_values(q: jax.Array, scales: jax.Array) -> jax.Array:

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from . import dispatch as _dispatch
+from . import validate as _validate
 from .format import MEBCRS, BlockedMEBCRS, block_format, to_coo
 
 __all__ = ["spmm", "spmm_blocked", "spmm_coo_segment", "spmm_dense_ref"]
@@ -78,8 +79,10 @@ def spmm_coo_segment(rows, cols, vals, b, num_rows: int):
 
 def spmm(fmt: MEBCRS, b: jax.Array, impl: str = "blocked", k_blk: int = 8,
          interpret: bool | None = None, n_blk: int | None = None,
-         split_blk: int | None = None, schedule=None,
-         precision: str | None = None) -> jax.Array:
+         split_blk: int | None = None, schedule=None, mesh=None, part=None,
+         n_batches: int | None = None, precision: str | None = None,
+         check: str | None = None, strict: bool | None = None,
+         guard_nonfinite: bool = False) -> jax.Array:
     """SpMM dispatch through the unified registry (:mod:`repro.core.dispatch`).
 
     ``impl`` names a registered implementation (``dispatch.impls("spmm")``
@@ -96,7 +99,25 @@ def spmm(fmt: MEBCRS, b: jax.Array, impl: str = "blocked", k_blk: int = 8,
     ``precision`` selects the mixed-precision path (DESIGN.md §13:
     ``"fp32"``/``"bf16"``/``"int8"``; ``None`` = operand dtypes as given)
     and is capability-checked against the impl's registry entry.
+
+    Robustness knobs (DESIGN.md §15): ``check`` audits ``fmt`` and guards
+    ``b`` before dispatch (``None`` → ambient
+    :func:`repro.core.validate.check_level`, default ``"none"`` — the
+    hot path stays bitwise-identical).  ``strict``/``guard_nonfinite``
+    route through :func:`repro.core.dispatch.robust_dispatch`:
+    ``strict=False`` degrades down the capability ladder on kernel
+    failure (one :class:`~repro.core.dispatch.FallbackWarning` + call-log
+    record), ``strict=True`` re-raises the impl's own error, and
+    ``guard_nonfinite=True`` re-runs a bf16/int8 forward at fp32 when the
+    narrow path yields NaN/Inf.  ``strict=None`` (default) keeps the
+    plain non-degrading dispatch.
     """
+    level = _validate.effective_check(check, fmt.values
+                                     if hasattr(fmt, "values")
+                                     else fmt.vals, b)
+    if level != "none":
+        _validate.validate(fmt, check=level)
+        _validate.guard_operand(b, "b")
     kwargs = {"k_blk": k_blk, "interpret": interpret}
     if n_blk is not None:
         kwargs["n_blk"] = n_blk
@@ -104,10 +125,25 @@ def spmm(fmt: MEBCRS, b: jax.Array, impl: str = "blocked", k_blk: int = 8,
         kwargs["split_blk"] = split_blk
     if schedule is not None:
         kwargs["schedule"] = schedule
+    if mesh is not None:
+        kwargs["mesh"] = mesh
+    if part is not None:
+        kwargs["part"] = part
+    if n_batches is not None:
+        kwargs["n_batches"] = n_batches
     if precision is not None:
-        _dispatch.require("spmm", impl, precision=precision)
+        if strict is None:
+            _dispatch.require("spmm", impl, precision=precision)
         kwargs["precision"] = precision
-    return _dispatch.dispatch("spmm", impl, fmt, b, **kwargs)
+    if strict is None and not guard_nonfinite:
+        return _dispatch.dispatch("spmm", impl, fmt, b, **kwargs)
+    # guard_nonfinite without an explicit strict keeps legacy error
+    # behavior (no silent degradation) — only the fp32 rescue is added.
+    strict_eff = bool(strict) if strict is not None else True
+    return _dispatch.robust_dispatch("spmm", impl, fmt, b,
+                                     strict=strict_eff,
+                                     guard_nonfinite=guard_nonfinite,
+                                     **kwargs)
 
 
 # ---------------------------------------------------------------------------

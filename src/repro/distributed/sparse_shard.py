@@ -256,7 +256,8 @@ def partition_schedule(blocked: BlockedMEBCRS,
                        num_devices: int = 1, *, split_blk: int = 1,
                        window_split: bool = True,
                        n_blk: int = 128,
-                       n_batches: int = 1) -> ShardedSchedule:
+                       n_batches: int = 1,
+                       check: Optional[str] = None) -> ShardedSchedule:
     """Split a Schedule into ``num_devices`` balanced contiguous ranges.
 
     Host-side numpy like :func:`~repro.core.format.build_schedule` — call
@@ -276,12 +277,17 @@ def partition_schedule(blocked: BlockedMEBCRS,
     reassembly (psum or ring) is a no-op for them — no failure, no
     silent replication of real work.
     """
+    from repro.core import validate as _validate
+
+    level = _validate.resolve_check(check)
     if num_devices < 1:
         raise ValueError(f"num_devices must be >= 1, got {num_devices}")
     if n_batches < 1:
         raise ValueError(f"n_batches must be >= 1, got {n_batches}")
     if schedule is None:
         schedule = blocked.schedule(split_blk)
+    _validate.validate_blocked(blocked, check=level)
+    _validate.validate_schedule(schedule, blocked=blocked, check=level)
     w = blocked.num_windows
     v = blocked.vector_size
     k_blk = blocked.k_blk
@@ -397,7 +403,7 @@ def partition_schedule(blocked: BlockedMEBCRS,
         n_v = (hi - lo) * k_blk
         flat_bvi[i, :n_v] = np.arange(lo * k_blk, hi * k_blk, dtype=np.int32)
 
-    return ShardedSchedule(
+    return _validate.validate_sharded(ShardedSchedule(
         seg_win=jnp.asarray(sw), seg_meta=jnp.asarray(sm),
         blk_id=jnp.asarray(bid), blk_win=jnp.asarray(bwin),
         row_own=jnp.asarray(row_own), blk_own=jnp.asarray(blk_own),
@@ -406,7 +412,7 @@ def partition_schedule(blocked: BlockedMEBCRS,
         bseg_win=jnp.asarray(bsw), bseg_meta=jnp.asarray(bsm),
         brow_idx=jnp.asarray(bri), bblk_id=jnp.asarray(bbi),
         bblk_win=jnp.asarray(bbw), bval_idx=jnp.asarray(bvi),
-        n_batches=nb)
+        n_batches=nb), blocked=blocked, check=level)
 
 
 def sharded_schedule(blocked: BlockedMEBCRS, num_devices: int, *,

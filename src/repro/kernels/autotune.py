@@ -24,6 +24,7 @@ import dataclasses
 import json
 import logging
 import os
+import re
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -150,13 +151,44 @@ def jnp_dtype_name(dtype) -> str:
     return np.dtype(dtype).name
 
 
+def _salvage_configs(text: str) -> Dict[str, Dict]:
+    """Recover per-key entries from a torn/corrupted cache file.
+
+    A crash mid-``os.replace`` cannot tear the file, but external
+    corruption (truncation, a stray editor, disk trouble) can.  The
+    entries are flat JSON objects, so every ``"key": {...}`` pair whose
+    object still parses — and survives :meth:`TuneConfig.from_json` — is
+    kept; the rest of the file is dropped.  Only runs when the text still
+    carries the current schema marker (``put`` writes it *first* so a
+    tail-truncated file keeps it): a torn *old*-schema file must stay
+    discarded wholesale.
+    """
+    m = re.search(r'"schema"\s*:\s*(\d+)', text)
+    if m is None or int(m.group(1)) != SCHEMA_VERSION:
+        return {}
+    configs: Dict[str, Dict] = {}
+    for em in re.finditer(r'"((?:[^"\\]|\\.)+)"\s*:\s*(\{[^{}]*\})', text):
+        key = em.group(1)
+        if key in ("schema", "configs"):
+            continue
+        try:
+            entry = json.loads(em.group(2))
+            TuneConfig.from_json(entry)   # reject malformed entries
+        except (ValueError, KeyError, TypeError):
+            continue
+        configs[key] = entry
+    return configs
+
+
 class AutotuneCache:
     """Persistent JSON cache ``{stats_key: TuneConfig}`` with atomic saves.
 
     On disk: ``{"schema": SCHEMA_VERSION, "configs": {key: cfg}}``.  A file
     whose schema does not match (including the schema-less v1 layout) is
     treated as empty — stale keys from an older bucketing scheme must not
-    satisfy new lookups.
+    satisfy new lookups.  A *corrupted* current-schema file (torn JSON,
+    malformed entries) is salvaged entry-by-entry rather than discarded:
+    each still-parseable config survives (DESIGN.md §15).
     """
 
     def __init__(self, path: Optional[str] = None):
@@ -165,11 +197,14 @@ class AutotuneCache:
 
     def _load(self) -> Dict[str, Dict]:
         if self._data is None:
+            text = None
             try:
                 with open(self.path) as f:
-                    raw = json.load(f)
+                    text = f.read()
+                raw = json.loads(text)
                 if (isinstance(raw, dict)
-                        and raw.get("schema") == SCHEMA_VERSION):
+                        and raw.get("schema") == SCHEMA_VERSION
+                        and isinstance(raw.get("configs", {}), dict)):
                     self._data = raw.get("configs", {})
                 else:
                     # Warn once per cache object — _load memoizes, so
@@ -181,23 +216,46 @@ class AutotuneCache:
                         "(stale bucketing; re-tuning from scratch)",
                         self.path, found, SCHEMA_VERSION)
                     self._data = {}
-            except (OSError, ValueError):
+            except OSError:
                 self._data = {}
+            except ValueError:
+                self._data = _salvage_configs(text or "")
+                logger.warning(
+                    "autotune cache %s is corrupted JSON; salvaged %d "
+                    "entr%s, re-tuning the rest", self.path,
+                    len(self._data), "y" if len(self._data) == 1 else "ies")
         return self._data
 
     def get(self, key: str) -> Optional[TuneConfig]:
         entry = self._load().get(key)
-        return TuneConfig.from_json(entry) if entry else None
+        if not entry:
+            return None
+        try:
+            return TuneConfig.from_json(entry)
+        except (KeyError, TypeError, ValueError):
+            logger.warning("autotune cache %s: dropping malformed entry "
+                           "for %r", self.path, key)
+            return None
 
     def put(self, key: str, cfg: TuneConfig) -> None:
         data = self._load()
         data[key] = cfg.to_json()
-        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-        tmp = f"{self.path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump({"schema": SCHEMA_VERSION, "configs": data},
-                      f, indent=2, sort_keys=True)
-        os.replace(tmp, self.path)
+        try:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            tmp = f"{self.path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                # "schema" first (no top-level sort_keys): a tail-torn
+                # file keeps its schema marker, which gates salvage.
+                json.dump({"schema": SCHEMA_VERSION,
+                           "configs": dict(sorted(data.items()))},
+                          f, indent=2)
+            os.replace(tmp, self.path)
+        except OSError as e:
+            # An unwritable cache dir must not fail the run — the tuned
+            # config is already memoized in-process.
+            logger.warning("autotune cache %s is not writable (%s); "
+                           "keeping tuned configs in memory only",
+                           self.path, e)
 
 
 _DEFAULT_CACHE: Optional[AutotuneCache] = None
@@ -245,6 +303,8 @@ def _sweep(fmt: MEBCRS, run_cfg, minor: int, key: str, *,
         return hit
 
     best: Optional[TuneConfig] = None
+    n_failed = 0
+    last_err: Optional[BaseException] = None
     for k_blk in k_blks:
         blocked = block_format(fmt, k_blk)
         for split in split_blks:
@@ -256,15 +316,33 @@ def _sweep(fmt: MEBCRS, run_cfg, minor: int, key: str, *,
                         if eff in seen:
                             continue
                         seen.add(eff)
-                        ms = _median_ms(
-                            lambda: run_cfg(blocked, eff, split, prec, ob),
-                            reps=reps)
+                        # Keep-alive (DESIGN.md §15): one candidate
+                        # crashing (Mosaic lowering, VMEM overflow, an
+                        # unsupported tile) must not kill the sweep — it
+                        # gets inf cost and the sweep moves on.
+                        try:
+                            ms = _median_ms(
+                                lambda: run_cfg(blocked, eff, split, prec,
+                                                ob),
+                                reps=reps)
+                        except Exception as e:
+                            n_failed += 1
+                            last_err = e
+                            logger.warning(
+                                "autotune candidate (k_blk=%d, n_blk=%d, "
+                                "split=%d, prec=%s, ob=%d) failed: %s: %s",
+                                k_blk, eff, split, prec, ob,
+                                type(e).__name__, str(e)[:200])
+                            continue
                         if best is None or ms < best.median_ms:
                             best = TuneConfig(k_blk=k_blk, n_blk=eff,
                                               median_ms=ms, split_blk=split,
                                               precision=prec,
                                               overlap_batches=ob)
-    assert best is not None
+    if best is None:
+        raise RuntimeError(
+            f"autotune sweep for {key!r}: all {n_failed} candidates "
+            f"failed") from last_err
     cache.put(key, best)
     return best
 

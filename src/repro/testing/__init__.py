@@ -1,0 +1,28 @@
+"""Fault-injection tooling for the hardened sparse runtime (DESIGN.md §15).
+
+:mod:`repro.testing.faults` corrupts formats, caches, and kernel configs
+on purpose and asserts the runtime either *names the violated invariant*
+(:class:`repro.core.validate.ValidationError`) or *recovers* — falls back
+down the capability ladder to the oracle answer, salvages the cache, or
+counts the event.  Importable from tests and runnable as a CLI for CI::
+
+    python -m repro.testing.faults --op spmm --impl blocked --strict
+"""
+
+from .faults import (
+    FAULTS,
+    FaultNotDetected,
+    corrupt_blocked,
+    corrupt_cache_file,
+    run_fault,
+    run_fault_suite,
+)
+
+__all__ = [
+    "FAULTS",
+    "FaultNotDetected",
+    "corrupt_blocked",
+    "corrupt_cache_file",
+    "run_fault",
+    "run_fault_suite",
+]

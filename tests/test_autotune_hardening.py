@@ -1,0 +1,139 @@
+"""Autotune cache hardening (DESIGN.md §15): atomic schema-first writes,
+salvage of torn/corrupted files, malformed-entry tolerance, unwritable
+paths, and sweep keep-alive under crashing candidates."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import from_dense
+from repro.kernels.autotune import (
+    SCHEMA_VERSION,
+    AutotuneCache,
+    TuneConfig,
+    _salvage_configs,
+    _sweep,
+)
+
+
+def _fmt(seed=0, m=32):
+    rng = np.random.default_rng(seed)
+    a = ((rng.random((m, m)) < 0.3)
+         * rng.standard_normal((m, m))).astype(np.float32)
+    return from_dense(jnp.asarray(a))
+
+
+def _fill(path, n=3):
+    c = AutotuneCache(str(path))
+    for i in range(n):
+        c.put(f"key{i}|spmm|k8|nb128|s0|pfp32|o0",
+              TuneConfig(8, 64 << i, float(i + 1)))
+    return c
+
+
+def test_schema_is_written_first(tmp_path):
+    p = tmp_path / "cache.json"
+    _fill(p)
+    text = p.read_text()
+    assert text.index('"schema"') < text.index('"configs"'), \
+        "schema must lead the file so a tail-torn copy keeps its marker"
+    assert json.loads(text)["schema"] == SCHEMA_VERSION
+
+
+def test_torn_file_salvages_parseable_entries(tmp_path):
+    p = tmp_path / "cache.json"
+    _fill(p, n=3)
+    text = p.read_text()
+    p.write_text(text[: int(len(text) * 0.6)])
+    salvaged = AutotuneCache(str(p))._load()
+    assert 1 <= len(salvaged) < 3
+    for key, entry in salvaged.items():
+        TuneConfig.from_json(entry)   # every survivor parses
+
+
+def test_torn_old_schema_is_discarded(tmp_path):
+    p = tmp_path / "cache.json"
+    _fill(p, n=2)
+    text = p.read_text().replace(f'"schema": {SCHEMA_VERSION}',
+                                 '"schema": 3')
+    p.write_text(text[:-10])
+    assert AutotuneCache(str(p))._load() == {}
+    assert _salvage_configs(text[:-10]) == {}
+
+
+def test_stale_schema_discarded_wholesale(tmp_path):
+    p = tmp_path / "cache.json"
+    raw = {"schema": 2, "configs": {"k": TuneConfig(8, 128, 1.0).to_json()}}
+    p.write_text(json.dumps(raw))
+    c = AutotuneCache(str(p))
+    assert c._load() == {}
+    assert c.get("k") is None
+
+
+def test_malformed_entry_dropped_not_fatal(tmp_path):
+    p = tmp_path / "cache.json"
+    raw = {"schema": SCHEMA_VERSION,
+           "configs": {"good": TuneConfig(8, 128, 1.0).to_json(),
+                       "bad": {"nothing": "useful"}}}
+    p.write_text(json.dumps(raw))
+    c = AutotuneCache(str(p))
+    assert c.get("good").n_blk == 128
+    assert c.get("bad") is None
+
+
+def test_unwritable_path_keeps_memory_cache(tmp_path):
+    ro = tmp_path / "ro"
+    ro.mkdir()
+    os.chmod(ro, 0o500)
+    try:
+        c = AutotuneCache(str(ro / "sub" / "cache.json"))
+        c.put("k", TuneConfig(8, 128, 1.0))   # must not raise
+        assert c.get("k").k_blk == 8          # in-process memo survives
+    finally:
+        os.chmod(ro, 0o700)
+
+
+def test_cache_heals_on_next_put(tmp_path):
+    p = tmp_path / "cache.json"
+    _fill(p, n=2)
+    p.write_text(p.read_text()[:-30])   # tear
+    c = AutotuneCache(str(p))
+    c.put("fresh", TuneConfig(16, 256, 0.5))
+    reread = AutotuneCache(str(p))._load()
+    assert "fresh" in reread
+    assert json.loads(p.read_text())["schema"] == SCHEMA_VERSION
+
+
+def test_sweep_survives_crashing_candidate(tmp_path):
+    fmt = _fmt()
+    attempts = []
+
+    def run_cfg(blocked, n_blk, split, prec, ob):
+        attempts.append(n_blk)
+        if n_blk == 64:
+            raise RuntimeError("simulated Mosaic lowering failure")
+        return jnp.zeros(())
+
+    cfg = _sweep(fmt, run_cfg, 512, "keepalive",
+                 k_blks=(8,), n_blks=(64, 128), split_blks=(0,),
+                 precisions=("fp32",), reps=1,
+                 cache=AutotuneCache(str(tmp_path / "c.json")))
+    assert cfg.n_blk == 128          # the surviving candidate wins
+    assert 64 in attempts and 128 in attempts
+
+
+def test_sweep_all_candidates_failing_raises(tmp_path):
+    fmt = _fmt()
+
+    def boom(*_a):
+        raise RuntimeError("no candidate can launch")
+
+    with pytest.raises(RuntimeError, match="all .* candidates failed"):
+        _sweep(fmt, boom, 512, "allfail",
+               k_blks=(8,), n_blks=(64,), split_blks=(0,),
+               precisions=("fp32",), reps=1,
+               cache=AutotuneCache(str(tmp_path / "c.json")))

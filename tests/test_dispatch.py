@@ -126,3 +126,129 @@ def test_sparse_sharding_helpers():
     assert sparse_operand_pspec(mesh) == P(None, "model")
     assert sparse_operand_pspec(mesh, batched=True) == \
         P("data", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation (DESIGN.md §15): fallback ladder, strict mode,
+# nonfinite guard
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_chain_shape():
+    chain = dispatch.fallback_chain("spmm", "pallas")
+    assert chain[-1] == "coo_segment" and "blocked" in chain
+    assert "pallas" not in chain  # rungs strictly below the requested impl
+    # off-ladder impls enter at the default tier
+    assert dispatch.fallback_chain("spmm", "pallas_noncoalesced")[0] == \
+        "pallas"
+    # sddmm "coo" returns edge values, not blocked layout: no fallback
+    assert dispatch.fallback_chain("sddmm", "coo") == ()
+    assert dispatch.fallback_for("sddmm", "coo") is None
+    # every op's ladder terminates in a pure-XLA rung
+    for op, first, last in (("spmm", "pallas", "coo_segment"),
+                            ("sddmm", "pallas", "blocked"),
+                            ("attention", "pallas_fused_attn", "blocked")):
+        chain = dispatch.fallback_chain(op, first)
+        assert chain and chain[-1] == last
+        assert dispatch.fallback_for(op, first) is not None
+
+
+def test_robust_dispatch_recovers_and_logs():
+    a, fmt = make_fmt(seed=11)
+    b = jnp.asarray(np.random.default_rng(3).standard_normal(
+        (36, 16)).astype(np.float32))
+    ref = a @ np.asarray(b)
+    with pytest.warns(dispatch.FallbackWarning) as wlog:
+        with dispatch.record_calls() as log:
+            out = spmm(fmt, b, impl="pallas", n_blk=0, interpret=True,
+                       strict=False)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+    assert ("spmm", "fallback:pallas->blocked") in log
+    assert len([w for w in wlog
+                if issubclass(w.category, dispatch.FallbackWarning)]) == 1
+    w = wlog[0].message
+    assert w.op == "spmm" and w.requested == "pallas" and w.used == "blocked"
+    assert w.failures and w.failures[0][0] == "pallas"
+
+
+def test_robust_dispatch_strict_reraises():
+    a, fmt = make_fmt(seed=12)
+    b = jnp.ones((36, 8), jnp.float32)
+    with pytest.raises(ZeroDivisionError):
+        spmm(fmt, b, impl="pallas", n_blk=0, interpret=True, strict=True)
+
+
+def test_robust_dispatch_never_swallows_validation_errors():
+    from repro.core.validate import ValidationError
+    from repro.testing.faults import corrupt_blocked
+
+    from repro.core import block_format
+
+    a, fmt = make_fmt(seed=13)
+    bad = corrupt_blocked(block_format(fmt, 8), "oob_col")
+    b = jnp.ones((36, 8), jnp.float32)
+    with pytest.raises(ValidationError, match=r"\[col-in-bounds\]"):
+        spmm(bad, b, impl="pallas", interpret=True, check="full",
+             strict=False)
+
+
+def test_guard_nonfinite_rescues_bf16_overflow():
+    """3.3999e38 is finite in fp32 but rounds to inf in bf16: the guarded
+    call re-runs at fp32 and matches the oracle; unguarded overflows."""
+    rng = np.random.default_rng(14)
+    m = k = 40
+    a = (rng.random((m, k)) < 0.3) * rng.standard_normal((m, k))
+    a = a.astype(np.float32)
+    a[3, 5] = 3.3999e38
+    fmt = from_dense(a)
+    b = jnp.asarray(rng.standard_normal((k, 16)) * 1e-5, jnp.float32)
+    bad = np.asarray(spmm(fmt, b, impl="blocked", precision="bf16"))
+    assert not np.isfinite(bad).all()
+    with pytest.warns(dispatch.FallbackWarning, match="non-finite"):
+        out = spmm(fmt, b, impl="blocked", precision="bf16",
+                   guard_nonfinite=True)
+    assert out.dtype == jnp.float32
+    ref = a.astype(np.float64) @ np.asarray(b, np.float64)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-12)
+
+
+def test_guard_nonfinite_benign_passthrough():
+    a, fmt = make_fmt(seed=15)
+    b = jnp.ones((36, 8), jnp.float32)
+    plain = spmm(fmt, b, impl="blocked", precision="bf16")
+    guarded = spmm(fmt, b, impl="blocked", precision="bf16",
+                   guard_nonfinite=True)
+    # promoted dtype, identical numerics (the narrow pass was kept)
+    assert guarded.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(plain, np.float32),
+                                  np.asarray(guarded))
+
+
+def test_ad_plan_guard_nonfinite():
+    from repro.core import ad_plan, spmm_ad
+    from repro.core import metrics as metrics_mod
+
+    rng = np.random.default_rng(16)
+    m = k = 32
+    a = ((rng.random((m, k)) < 0.3)
+         * rng.standard_normal((m, k))).astype(np.float32)
+    a[3, 5] = 3.3999e38
+    fmt = from_dense(a)
+    b = jnp.asarray(rng.standard_normal((k, 16)) * 1e-5, jnp.float32)
+    plan = ad_plan(fmt, impl="blocked", precision="bf16",
+                   guard_nonfinite=True)
+    metrics_mod.reset_counters("guard_nonfinite_rerun")
+    out = spmm_ad(plan, plan.fwd.vals, b)
+    assert out.dtype == jnp.float32 and bool(jnp.isfinite(out).all())
+    assert metrics_mod.counters().get("guard_nonfinite_rerun", 0) >= 1
+    # gradients stay the plain straight-through duality: dVals is finite;
+    # dB legitimately overflows in the rows fed by the poisoned master
+    # (the guard covers the forward only)
+    g = jax.grad(lambda v, bb: spmm_ad(plan, v, bb).sum(),
+                 argnums=(0, 1))(plan.fwd.vals, b)
+    assert bool(jnp.isfinite(g[0]).all())
+    finite_rows = np.isfinite(np.asarray(g[1])).all(axis=1)
+    assert not finite_rows[5] and finite_rows.sum() >= k - 1
+    # fp32/None plans ignore the flag entirely
+    assert not ad_plan(fmt, impl="blocked",
+                       guard_nonfinite=True).guard_nonfinite

@@ -174,3 +174,47 @@ def test_compression_matches_shared_quantizer():
     q, scale = quantize_blocked(grads["w"], 32)
     np.testing.assert_array_equal(
         np.asarray(back), np.asarray(dequantize_blocked(q, scale, (13, 7))))
+
+
+# --------------------------------------------- saturation clip counter ----
+
+
+def test_external_scale_saturates_and_counts_clips():
+    """A fixed (stale/calibrated) scale that underestimates the range must
+    saturate at ±127 — never wrap — and report how many elements clipped
+    on the ``int8_clip`` runtime counter (DESIGN.md §15)."""
+    from repro.core import metrics as metrics_mod
+
+    rng = np.random.default_rng(21)
+    x = jnp.asarray(rng.uniform(-300.0, 300.0, size=(256,)), jnp.float32)
+    expected_clips = int(np.sum(np.abs(np.round(np.asarray(x))) > 127))
+    assert expected_clips > 0  # the fixture must actually overflow int8
+
+    metrics_mod.reset_counters("int8_clip")
+    q, sc = quantize_blocked(x, 32, scale=1.0)
+    qn = np.asarray(q)
+    assert qn.min() >= -127 and qn.max() <= 127      # saturated, not wrapped
+    assert qn.max() == 127 and qn.min() == -127
+    assert metrics_mod.counters()["int8_clip"] == expected_clips
+    np.testing.assert_array_equal(np.asarray(sc), np.ones(256 // 32))
+
+    # jitted quantization still lands the count (debug.callback path)
+    import jax
+
+    metrics_mod.reset_counters("int8_clip")
+    q2 = jax.jit(lambda t: quantize_blocked(t, 32, scale=1.0)[0])(x)
+    jax.block_until_ready(q2)
+    assert metrics_mod.counters()["int8_clip"] == expected_clips
+    np.testing.assert_array_equal(np.asarray(q2), qn)
+
+
+def test_absmax_scale_never_clips():
+    """The default absmax scale covers the range by construction: the
+    counter must stay silent."""
+    from repro.core import metrics as metrics_mod
+
+    rng = np.random.default_rng(22)
+    metrics_mod.reset_counters("int8_clip")
+    quantize_blocked(jnp.asarray(rng.standard_normal(512) * 1e4,
+                                 jnp.float32), 64)
+    assert metrics_mod.counters().get("int8_clip", 0) == 0

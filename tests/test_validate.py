@@ -1,0 +1,344 @@
+"""Structural validation layer (DESIGN.md §15): named invariants, check
+levels, jit-safe cheap guards, and construction-site wiring."""
+
+import dataclasses
+import os
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    block_format,
+    build_schedule,
+    from_coo,
+    from_dense,
+    spmm,
+    to_dense,
+)
+from repro.core.validate import (  # noqa: E402
+    ValidationError,
+    validate,
+    ValidationWarning,
+    check_level,
+    checking,
+    effective_check,
+    validate_blocked,
+    validate_format,
+    validate_schedule,
+    validate_sharded,
+)
+from repro.testing.faults import corrupt_blocked  # noqa: E402
+
+
+def make_fmt(seed=0, m=48, k=40, density=0.2):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    a *= rng.random((m, k)) < density
+    return a, from_dense(a, vector_size=8)
+
+
+# ---------------------------------------------------------------------------
+# Check-level resolution
+# ---------------------------------------------------------------------------
+
+
+def test_check_level_default_and_env(monkeypatch):
+    monkeypatch.delenv("REPRO_CHECK", raising=False)
+    assert check_level() == "none"
+    monkeypatch.setenv("REPRO_CHECK", "full")
+    assert check_level() == "full"
+    monkeypatch.setenv("REPRO_CHECK", "bogus")
+    assert check_level() == "none"
+
+
+def test_checking_context_nests_and_restores(monkeypatch):
+    monkeypatch.delenv("REPRO_CHECK", raising=False)
+    assert check_level() == "none"
+    with checking("cheap"):
+        assert check_level() == "cheap"
+        with checking("full"):
+            assert check_level() == "full"
+        assert check_level() == "cheap"
+    assert check_level() == "none"
+    with pytest.raises(ValueError, match="check must be one of"):
+        with checking("loud"):
+            pass
+
+
+def test_explicit_check_beats_ambient():
+    _, fmt = make_fmt()
+    bad = dataclasses.replace(
+        fmt, column_indices=fmt.column_indices.at[0].set(10_000))
+    with checking("none"):
+        with pytest.raises(ValidationError, match=r"\[col-in-bounds\]"):
+            validate_format(bad, check="full")
+    with checking("full"):
+        validate_format(bad, check="none")  # explicit none wins
+
+
+def test_effective_check_downgrades_under_tracer():
+    _, fmt = make_fmt()
+
+    def probe(x):
+        assert effective_check("full", x) == "cheap"
+        return x
+
+    jax.jit(probe)(fmt.values)
+    assert effective_check("full", np.ones(3)) == "full"
+
+
+# ---------------------------------------------------------------------------
+# Named invariants — canonical format
+# ---------------------------------------------------------------------------
+
+
+def test_validate_format_accepts_healthy():
+    _, fmt = make_fmt()
+    assert validate_format(fmt, check="full") is fmt
+
+
+@pytest.mark.parametrize("tamper,invariant", [
+    (lambda f: dataclasses.replace(
+        f, row_pointers=f.row_pointers[:-1]), "row-ptr-shape"),
+    (lambda f: dataclasses.replace(
+        f, row_pointers=jnp.asarray(
+            np.asarray(f.row_pointers)[::-1].copy())), "row-ptr-monotone"),
+    (lambda f: dataclasses.replace(
+        f, column_indices=f.column_indices.at[0].set(10_000)),
+     "col-in-bounds"),
+    (lambda f: dataclasses.replace(
+        f, column_indices=jnp.asarray(f.column_indices, jnp.float32)),
+     "dtype-mismatch"),
+    (lambda f: dataclasses.replace(f, values=f.values[:-1]),
+     "row-ptr-bounds"),
+    (lambda f: dataclasses.replace(
+        f, values=f.values.at[0, 0].set(jnp.inf)), "values-finite"),
+    (lambda f: dataclasses.replace(
+        f, mask=jnp.asarray(f.mask, jnp.int32)), "mask-dtype"),
+])
+def test_validate_format_names_the_invariant(tamper, invariant):
+    _, fmt = make_fmt()
+    with pytest.raises(ValidationError) as ei:
+        validate_format(tamper(fmt), check="full")
+    assert ei.value.invariant == invariant
+    assert str(ei.value).startswith(f"[{invariant}]")
+
+
+def test_masked_zero_invariant():
+    """Garbage under mask=False silently corrupts every contraction — the
+    audit treats it as a first-class violation."""
+    _, fmt = make_fmt()
+    mask = np.asarray(fmt.mask)
+    off = np.argwhere(~mask)
+    assert off.size, "need at least one padding lane"
+    vals = np.asarray(fmt.values).copy()
+    vals[off[0][0], off[0][1]] = 7.0
+    bad = dataclasses.replace(fmt, values=jnp.asarray(vals))
+    with pytest.raises(ValidationError, match=r"\[masked-zeros\]"):
+        validate_format(bad, check="full")
+
+
+# ---------------------------------------------------------------------------
+# Named invariants — blocked view / schedule / sharded partition
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fault,invariants", [
+    ("oob_col", ("col-in-bounds",)),
+    ("swapped_win_ptr", ("win-ptr-monotone", "win-ptr-bounds")),
+    ("truncated_leaf", ("leaf-length",)),
+    ("nonfinite_values", ("values-finite",)),
+    ("dtype_mismatch", ("dtype-mismatch",)),
+])
+def test_validate_blocked_names_the_invariant(fault, invariants):
+    _, fmt = make_fmt(seed=3)
+    blocked = block_format(fmt, 8)
+    with pytest.raises(ValidationError) as ei:
+        validate_blocked(corrupt_blocked(blocked, fault), check="full")
+    assert ei.value.invariant in invariants
+
+
+def test_validate_blocked_scales_contract():
+    from repro.core.quantize import quantize_format
+
+    _, fmt = make_fmt(seed=4)
+    qb = quantize_format(block_format(fmt, 8))
+    validate_blocked(qb, check="full")
+    with pytest.raises(ValidationError, match=r"\[dtype-mismatch\]"):
+        validate_blocked(dataclasses.replace(qb, scales=None), check="full")
+    bad_sc = jnp.asarray(np.asarray(qb.scales)).at[0].set(jnp.nan)
+    with pytest.raises(ValidationError, match=r"\[scales-finite\]"):
+        validate_blocked(dataclasses.replace(qb, scales=bad_sc), check="full")
+
+
+def test_validate_schedule_coverage_and_flags():
+    _, fmt = make_fmt(seed=5)
+    blocked = block_format(fmt, 8)
+    sched = build_schedule(blocked, split_blk=1)
+    validate_schedule(sched, blocked=blocked, check="full")
+    sm = np.asarray(sched.seg_meta).copy()
+    sm[0, 1] += 1   # stretch one segment: coverage no longer exact
+    with pytest.raises(ValidationError) as ei:
+        validate_schedule(dataclasses.replace(sched,
+                                              seg_meta=jnp.asarray(sm)),
+                          blocked=blocked, check="full")
+    assert ei.value.invariant in ("seg-coverage", "seg-flags")
+    sm2 = np.asarray(sched.seg_meta).copy()
+    sm2[:, 2] = 0   # no segment claims "first": accumulator never resets
+    with pytest.raises(ValidationError, match=r"\[seg-flags\]"):
+        validate_schedule(dataclasses.replace(sched,
+                                              seg_meta=jnp.asarray(sm2)),
+                          blocked=blocked, check="full")
+
+
+def test_validate_sharded_ownership():
+    from repro.distributed.sparse_shard import sharded_schedule
+
+    _, fmt = make_fmt(seed=6, m=64, k=64)
+    blocked = block_format(fmt, 8)
+    part = sharded_schedule(blocked, 2, split_blk=1)
+    validate_sharded(part, blocked=blocked, check="full")
+    ro = np.asarray(part.row_own).copy()
+    ro[0, :] = False   # device 0 forgets its rows
+    with pytest.raises(ValidationError) as ei:
+        validate_sharded(dataclasses.replace(part, row_own=jnp.asarray(ro)),
+                         blocked=blocked, check="full")
+    assert ei.value.invariant in ("row-own-consistent", "row-own-cover")
+    bo = np.asarray(part.blk_own).copy()
+    if bo[:, 0].sum() == 1:
+        bo[:, 0] = True   # first value row now owned twice
+        with pytest.raises(ValidationError, match=r"\[blk-own-unique\]"):
+            validate_sharded(
+                dataclasses.replace(part, blk_own=jnp.asarray(bo)),
+                blocked=blocked, check="full")
+
+
+def test_validate_type_dispatch():
+    _, fmt = make_fmt()
+    blocked = block_format(fmt, 8)
+    assert validate(fmt, check="full") is fmt
+    assert validate(blocked, check="full") is blocked
+    with pytest.raises(TypeError, match="cannot validate"):
+        validate(np.zeros(3), check="full")
+
+
+# ---------------------------------------------------------------------------
+# Construction-site and entry-point wiring
+# ---------------------------------------------------------------------------
+
+
+def test_from_coo_rejects_oob_and_duplicates():
+    with pytest.raises(ValidationError, match=r"\[coo-in-bounds\]"):
+        from_coo(np.array([0]), np.array([99]), np.array([1.0]), (8, 8))
+    rows = np.array([0, 0, 1])
+    cols = np.array([1, 1, 2])
+    vals = np.array([1.0, 2.0, 3.0], np.float32)
+    with pytest.raises(ValidationError, match=r"\[duplicate-coords\]"):
+        from_coo(rows, cols, vals, (8, 8), duplicates="error")
+    # default coalescing sums; under check="full" it additionally warns
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        fmt = from_coo(rows, cols, vals, (8, 8),
+                       check="none")   # silent when checks are off
+    dense = np.asarray(to_dense(fmt))
+    assert dense[0, 1] == 3.0 and dense[1, 2] == 3.0
+    with pytest.warns(ValidationWarning, match="duplicate"):
+        from_coo(rows, cols, vals, (8, 8), check="full")
+
+
+def test_block_format_rejects_bad_k_blk():
+    _, fmt = make_fmt()
+    for bad in (0, -4, 2 ** 20, "8"):
+        with pytest.raises(ValidationError, match=r"\[block-config\]"):
+            block_format(fmt, bad)
+
+
+def test_spmm_entry_point_validates():
+    a, fmt = make_fmt(seed=7)
+    b = jnp.ones((40, 8), jnp.float32)
+    blocked = block_format(fmt, 8)
+    bad = corrupt_blocked(blocked, "oob_col")
+    with pytest.raises(ValidationError, match=r"\[col-in-bounds\]"):
+        spmm(bad, b, impl="blocked", check="full")
+    # cheap guard on the dense operand: eager call raises
+    with pytest.raises(ValidationError, match=r"\[values-finite\]"):
+        spmm(blocked, b.at[0, 0].set(jnp.nan), impl="blocked", check="cheap")
+
+
+def test_cheap_guard_warns_under_jit_raises_eagerly():
+    a, fmt = make_fmt(seed=8)
+    blocked = block_format(fmt, 8)
+
+    def run(b):
+        return spmm(blocked, b, impl="blocked", check="cheap")
+
+    nan_b = jnp.ones((40, 8), jnp.float32).at[3, 3].set(jnp.nan)
+    with pytest.warns(ValidationWarning, match="values-finite"):
+        out = jax.jit(run)(nan_b)
+        jax.block_until_ready(out)
+    with pytest.raises(ValidationError, match=r"\[values-finite\]"):
+        run(nan_b)
+
+
+def test_check_none_is_bitwise_identical():
+    a, fmt = make_fmt(seed=9)
+    b = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (40, 16)).astype(np.float32))
+    base = spmm(fmt, b, impl="blocked")
+    for level in ("none", "cheap", "full"):
+        np.testing.assert_array_equal(
+            np.asarray(spmm(fmt, b, impl="blocked", check=level)),
+            np.asarray(base))
+
+
+# ---------------------------------------------------------------------------
+# Property-based round-trips (skip cleanly without hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(9, 64), st.integers(9, 64))
+def test_random_coo_always_validates(seed, m, k):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    a *= rng.random((m, k)) < 0.25
+    rows, cols = np.nonzero(a)
+    fmt = from_coo(rows, cols, a[rows, cols], (m, k), check="full")
+    validate_format(fmt, check="full")
+    blocked = block_format(fmt, 8, check="full")
+    validate_schedule(build_schedule(blocked, split_blk=1, check="full"),
+                      blocked=blocked, check="full")
+    np.testing.assert_allclose(np.asarray(to_dense(fmt)), a, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6))
+def test_duplicate_coalescing_matches_dense_sum(seed, ndup):
+    rng = np.random.default_rng(seed)
+    m = k = 24
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    a *= rng.random((m, k)) < 0.2
+    rows, cols = np.nonzero(a)
+    if rows.size == 0:
+        return
+    vals = a[rows, cols]
+    pick = rng.integers(0, rows.size, ndup)
+    extra = rng.standard_normal(ndup).astype(np.float32)
+    rows2 = np.concatenate([rows, rows[pick]])
+    cols2 = np.concatenate([cols, cols[pick]])
+    vals2 = np.concatenate([vals, extra])
+    dense = a.copy()
+    np.add.at(dense, (rows[pick], cols[pick]), extra)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", ValidationWarning)
+        fmt = from_coo(rows2, cols2, vals2, (m, k), duplicates="sum",
+                       check="full")
+    np.testing.assert_allclose(np.asarray(to_dense(fmt)), dense, atol=1e-5)
