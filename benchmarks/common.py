@@ -320,6 +320,8 @@ def emit_bench_json(recs: Sequence[Dict], path: str, *, op: str,
     ``recs`` are per-(matrix, shape, impl, dtype) records carrying
     ``hbm_bytes``; the summary aggregates the staged-baseline / fused
     traffic ratio that CI floor-checks (see .github/workflows/ci.yml).
+    Records without ``hbm_bytes`` (e.g. the ``--datasets`` wall-clock /
+    cost family) are persisted but excluded from the traffic pairing.
     Records without a ``dtype`` field count as float32; staged/fused
     pairs match within a dtype.  When the fused impl carries both
     float32 and bfloat16 records for a shape, the summary also reports
@@ -335,10 +337,11 @@ def emit_bench_json(recs: Sequence[Dict], path: str, *, op: str,
     def _key(r):
         return (r["matrix"], tuple(r["shape"]), r.get("dtype", "float32"))
 
-    fused = {_key(r): r["hbm_bytes"] for r in recs if r["impl"] == fused_impl}
+    fused = {_key(r): r["hbm_bytes"] for r in recs
+             if r["impl"] == fused_impl and "hbm_bytes" in r}
     ratios = [r["hbm_bytes"] / max(fused[_key(r)], 1)
               for r in recs if r["impl"] == baseline_impl
-              and _key(r) in fused]
+              and "hbm_bytes" in r and _key(r) in fused]
     dt_ratios = [
         fused[(m, s, "float32")] / max(b, 1)
         for (m, s, dt), b in fused.items()

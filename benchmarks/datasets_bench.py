@@ -1,0 +1,149 @@
+"""Real-matrix benchmark records: per-structure-class impl winners.
+
+``benchmarks.run --op spmm --datasets`` runs the vendored real-matrix
+set (tests/data/, plus anything scripts/fetch_datasets.py pulled)
+through the SpMM execution paths and emits one record per
+(matrix, impl) into BENCH_spmm.json, each tagged with the matrix's
+structure-taxonomy class (repro.sparse.structure).  The summary then
+reports the winning impl *per class* — the cuTeSpMM/ETH observation the
+taxonomy exists to capture: banded/mesh matrices are window-uniform and
+the window-parallel fused kernel wins, hub matrices want the
+block-parallel balanced schedule.
+
+Winners are judged by the idle-cell-adjusted :func:`benchmarks.common
+.balance_cost` model — deterministic structural counts, so the per-class
+winner table is stable in CI (interpret-mode wall clock is recorded too,
+but only as context).  Every record is parity-checked against the dense
+oracle before it is timed; the summary's ``datasets_parity_ok`` flag is
+the CI floor — a perf record from a wrong kernel must never land in the
+artifact.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import block_format, spmm_blocked, spmm_coo_segment  # noqa: E402
+from repro.core.format import to_coo, window_skew  # noqa: E402
+
+from .common import balance_cost, geomean, time_fn  # noqa: E402
+
+N_DEFAULT = 64
+
+
+def dataset_records(names: Optional[Sequence[str]] = None,
+                    n: int = N_DEFAULT, split_blk: int = 1,
+                    verbose: bool = True) -> List[Dict]:
+    """One record per (vendored matrix, impl), parity-checked and tagged
+    with the structure class.
+
+    Impls: ``blocked`` (XLA einsum), ``coo_segment`` (CUDA-core-class
+    data flow), ``pallas_fused`` (window-parallel kernel) and
+    ``pallas_balanced`` (block-parallel schedule) — the pair whose
+    cost-model comparison picks the per-class winner.
+    """
+    from repro.data.datasets import load_vendored
+    from repro.kernels import ops
+    from repro.sparse.structure import classify_format
+
+    recs: List[Dict] = []
+    for sample in load_vendored(names):
+        fmt = sample.to_format()
+        blocked = block_format(fmt, k_blk=8)
+        schedule = blocked.schedule(split_blk)
+        cls = sample.meta.get("structure_class") or classify_format(fmt)
+        m, kd = sample.shape
+        dense = sample.dense()
+        sparsity = 1.0 - sample.nnz / float(m * kd)
+        wskew = window_skew(fmt)
+        b = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (kd, n)).astype(np.float32))
+        ref = dense @ np.asarray(b)
+        atol = 2e-4 * max(float(np.abs(ref).max()), 1.0)
+        n_blk_eff = min(128, max(n, 1))
+        rows_d, cols_d, vals_d = (jnp.asarray(x) for x in to_coo(fmt))
+
+        impls = [
+            ("blocked", None,
+             lambda: spmm_blocked(blocked, b)),
+            ("coo_segment", None,
+             lambda: spmm_coo_segment(rows_d, cols_d, vals_d, b,
+                                      num_rows=m)),
+            ("pallas_fused", "window",
+             lambda: ops.spmm(blocked, b, n_blk=n_blk_eff, interpret=True)),
+            ("pallas_balanced", "balanced",
+             lambda: ops.spmm_balanced(blocked, b, schedule=schedule,
+                                       n_blk=n_blk_eff, interpret=True)),
+        ]
+        for impl, cost_model, fn in impls:
+            out = np.asarray(fn(), np.float32)
+            assert np.allclose(out, ref, rtol=2e-4, atol=atol), \
+                f"dataset parity failed: {impl} on {sample.name}"
+            recs.append({
+                "op": "spmm", "impl": impl, "matrix": sample.name,
+                "structure_class": cls,
+                "shape": [m, kd, n], "sparsity": sparsity,
+                "dtype": "float32", "window_skew": round(wskew, 2),
+                "vector_size": 8, "k_blk": 8, "n_blk": n_blk_eff,
+                "median_ms": time_fn(fn, reps=3, warmup=1),
+                "balance_cost": balance_cost(
+                    blocked, n, impl=cost_model, schedule=schedule,
+                    n_blk=n_blk_eff) if cost_model else None,
+                "parity_ok": True,
+            })
+        if verbose:
+            by = {r["impl"]: r for r in recs if r["matrix"] == sample.name}
+            win = by["pallas_fused"]["balance_cost"]
+            bal = by["pallas_balanced"]["balance_cost"]
+            pick = "balanced" if bal < win else "fused"
+            print(f"  {sample.name:16s} {cls:8s} skew={wskew:5.1f} "
+                  f"window/balanced cost {win / max(bal, 1):.2f}x -> {pick}")
+    return recs
+
+
+def datasets_summary(recs: Sequence[Dict]) -> Dict:
+    """Per-structure-class winner table + the parity floor flag.
+
+    ``class_winners`` maps each class to the impl with the lowest
+    geomean :func:`balance_cost` over that class's matrices (among the
+    cost-modeled kernel pair); ``datasets_parity_ok`` is True iff every
+    record passed its oracle check (CI floor).
+    """
+    by_class: Dict[str, Dict[str, List[float]]] = {}
+    for r in recs:
+        if r.get("balance_cost") is None:
+            continue
+        by_class.setdefault(r["structure_class"], {}).setdefault(
+            r["impl"], []).append(float(r["balance_cost"]))
+    winners = {}
+    for cls, impl_costs in sorted(by_class.items()):
+        costs = {impl: geomean(v) for impl, v in impl_costs.items()}
+        best = min(costs, key=costs.get)
+        winners[cls] = {
+            "impl": best,
+            "cost_geomean": costs[best],
+            "vs": {i: round(c / max(costs[best], 1e-12), 3)
+                   for i, c in costs.items() if i != best},
+        }
+    return {
+        "datasets_parity_ok": all(r.get("parity_ok") for r in recs)
+        and bool(recs),
+        "num_dataset_records": len(recs),
+        "dataset_matrices": sorted({r["matrix"] for r in recs}),
+        "class_winners": winners,
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    records = dataset_records()
+    print(json.dumps(datasets_summary(records), indent=2))

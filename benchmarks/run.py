@@ -63,10 +63,15 @@ modifier flags:
                >= 1.3x cost floor in CI) and the per-device partition
                balance records (DESIGN.md §12, max/mean <= 1.25 floor at
                8 devices)
+  --datasets   with --op spmm: add the vendored real-matrix set
+               (tests/data/, structure-taxonomy-tagged) — per-class impl
+               winner records with a dense-oracle parity floor
+               (summary key datasets_parity_ok must be true in CI)
 
 examples:
   python -m benchmarks.run --op attn --scale 0.002
   python -m benchmarks.run --op spmm --skewed --scale 0.002
+  python -m benchmarks.run --op spmm --datasets --scale 0.002
 """
 
 
@@ -83,6 +88,9 @@ def main(argv=None) -> int:
     p.add_argument("--skewed", action="store_true",
                    help="with --op spmm: add hub-row skewed matrices and "
                         "the balanced-vs-window scheduling comparison")
+    p.add_argument("--datasets", action="store_true",
+                   help="with --op spmm: add the vendored real-matrix set "
+                        "with per-structure-class winner records")
     p.add_argument("--quick", action="store_true")
     p.add_argument("--scale", type=float, default=None)
     args = p.parse_args(argv)
@@ -94,10 +102,13 @@ def main(argv=None) -> int:
 
         print("\n=== §11 SpMM kernel paths"
               + (" + block-parallel scheduling (skewed)" if args.skewed
+                 else "")
+              + (" + real-matrix set (datasets)" if args.datasets
                  else "") + " ===")
         t0 = time.time()
         # interpret-mode kernel bodies run in Python → small scale
-        out = spmm_bench.run_op(scale=min(scale, 0.002), skewed=args.skewed)
+        out = spmm_bench.run_op(scale=min(scale, 0.002), skewed=args.skewed,
+                                datasets=args.datasets)
         print(f"\n=== summary ({time.time() - t0:.0f}s) ===")
         print(json.dumps(out, indent=2, default=str))
         return 0

@@ -370,9 +370,11 @@ def _skew_summary(recs) -> dict:
     }
 
 
-def run_op(scale: float = 0.002, skewed: bool = False, verbose: bool = True,
+def run_op(scale: float = 0.002, skewed: bool = False,
+           datasets: bool = False, verbose: bool = True,
            bench_json: str = "BENCH_spmm.json"):
-    """``benchmarks.run --op spmm [--skewed]``: emit BENCH_spmm.json.
+    """``benchmarks.run --op spmm [--skewed] [--datasets]``: emit
+    BENCH_spmm.json.
 
     Always contains the standard fused/staged/noncoalesced/tuned records
     (so the staged-vs-fused HBM floor stays checkable from the same
@@ -380,7 +382,9 @@ def run_op(scale: float = 0.002, skewed: bool = False, verbose: bool = True,
     records (the ≥ 1.3× CI floor on skew ≥ 1.5 matrices), the device-
     partition balance records, and the §14 overlapped-ring makespan
     records (the ≥ 1.15× floor at 8 devices on the row-balanced suite),
-    folding all their summaries in.
+    folding all their summaries in.  ``datasets=True`` appends the
+    vendored real-matrix records (:mod:`benchmarks.datasets_bench`) —
+    per-structure-class impl winners with a dense-oracle parity floor.
     """
     recs = bench_records(scale=scale, verbose=verbose)
     extra = {}
@@ -392,6 +396,12 @@ def run_op(scale: float = 0.002, skewed: bool = False, verbose: bool = True,
         extra = {**_skew_summary(skew_recs),
                  **_device_balance_summary(dev_recs),
                  **_overlap_summary(ovl_recs)}
+    if datasets:
+        from .datasets_bench import dataset_records, datasets_summary
+
+        ds_recs = dataset_records(verbose=verbose)
+        recs = recs + ds_recs
+        extra = {**extra, **datasets_summary(ds_recs)}
     result = {}
     attach_bench_json(result, recs, bench_json, op="spmm",
                       fused_impl="pallas_fused",

@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Fetch the download-only datasets from tests/data/manifest.json.
+
+The vendored sample set ships in-repo and is all CI ever touches; this
+script pulls the *full* catalog (SuiteSparse Matrix Market tarballs) so
+local runs of the conformance harness and ``benchmarks/run.py
+--datasets`` can cover real full-size matrices:
+
+    python scripts/fetch_datasets.py              # everything missing
+    python scripts/fetch_datasets.py bcsstk01     # named entries only
+    python scripts/fetch_datasets.py --list       # show catalog + status
+
+Downloads land next to the vendored files (or in $REPRO_DATASETS_DIR)
+and are picked up automatically by ``repro.data.load_vendored()``.
+Never run in CI — the conformance job must stay offline.
+"""
+
+import argparse
+import gzip
+import io
+import pathlib
+import sys
+import tarfile
+import urllib.request
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.data.datasets import load_manifest, vendored_dir  # noqa: E402
+
+
+def fetch(entry, data_dir: pathlib.Path) -> pathlib.Path:
+    rel = entry.get("extract") or f"{entry['name']}.mtx"
+    dest = data_dir / rel
+    if dest.exists():
+        print(f"  {entry['name']}: already present ({dest})")
+        return dest
+    url = entry["url"]
+    print(f"  {entry['name']}: fetching {url}")
+    with urllib.request.urlopen(url, timeout=60) as resp:
+        raw = resp.read()
+    dest.parent.mkdir(parents=True, exist_ok=True)
+    if url.endswith((".tar.gz", ".tgz")):
+        with tarfile.open(fileobj=io.BytesIO(raw), mode="r:gz") as tar:
+            member = tar.getmember(rel)
+            src = tar.extractfile(member)
+            assert src is not None, f"{rel} is not a regular file in {url}"
+            dest.write_bytes(src.read())
+    elif url.endswith(".gz"):
+        dest.write_bytes(gzip.decompress(raw))
+    else:
+        dest.write_bytes(raw)
+    print(f"  {entry['name']}: wrote {dest}")
+    return dest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("names", nargs="*",
+                    help="manifest entries to fetch (default: all missing)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the catalog and local status, fetch nothing")
+    args = ap.parse_args(argv)
+
+    data_dir = vendored_dir()
+    manifest = load_manifest(data_dir)
+    remote = [d for d in manifest["datasets"] if d.get("url")]
+
+    if args.list:
+        for d in manifest["datasets"]:
+            rel = d.get("file") or d.get("extract") or f"{d['name']}.mtx"
+            state = ("vendored" if d.get("file")
+                     else "fetched" if (data_dir / rel).exists()
+                     else "missing")
+            print(f"{d['name']:16s} {d['structure_class']:8s} {state}")
+        return 0
+
+    if args.names:
+        known = {d["name"]: d for d in remote}
+        unknown = [n for n in args.names if n not in known]
+        if unknown:
+            ap.error(f"not download-only manifest entries: {unknown} "
+                     f"(catalog: {sorted(known)})")
+        todo = [known[n] for n in args.names]
+    else:
+        todo = remote
+
+    print(f"fetching into {data_dir}")
+    failures = 0
+    for entry in todo:
+        try:
+            fetch(entry, data_dir)
+        except Exception as e:  # keep going; report at the end
+            failures += 1
+            print(f"  {entry['name']}: FAILED ({e})")
+    if failures:
+        print(f"{failures}/{len(todo)} downloads failed (offline?); "
+              "the vendored set still covers every structure class")
+    return 1 if failures == len(todo) and todo else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

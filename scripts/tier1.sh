@@ -31,6 +31,14 @@ if [[ $# -eq 0 ]]; then
   python -m repro.testing.faults --op spmm --impl blocked --strict
   python -m repro.testing.faults --op spmm --impl pallas --interpret \
     --no-strict
+
+  # Real-matrix conformance gate: the harness must catch a broken impl
+  # (self-test), then the full registry — every (op, impl, precision) —
+  # must match the dense oracle on a two-matrix vendored subset.  The
+  # full 14-matrix sweep is the real-matrix-conformance CI job.
+  python -m repro.testing.conformance --self-test
+  python -m repro.testing.conformance \
+    --datasets densearray_8x6,mesh3d_4 --precision fp32
 fi
 
 # Gradient-path smoke (full runs only): two training steps through the
@@ -54,11 +62,22 @@ if [[ $# -eq 0 && "${TIER1_SMOKE:-1}" == "1" ]]; then
   # pass over the bench suite: every constructor and dispatch in the
   # bench audits its formats/schedules host-side (bench numbers are
   # cost-model floors, not wall-clock, so the audit does not skew them).
-  REPRO_CHECK=full python -m benchmarks.run --op spmm --skewed --scale 0.002
+  # --datasets folds the vendored real-matrix records into the same run:
+  # every dataset record asserts oracle parity before timing, and the
+  # summary maps each structure class to its winning impl.
+  REPRO_CHECK=full python -m benchmarks.run --op spmm --skewed --datasets \
+    --scale 0.002
   python - <<'EOF'
 import json
 with open("BENCH_spmm.json") as f:
     summary = json.load(f)["summary"]
+# Real-matrix floor: every vendored-dataset record passed its dense-
+# oracle parity check, and every structure class elected a winner.
+assert summary["datasets_parity_ok"], "dataset record failed oracle parity"
+winners = summary["class_winners"]
+print("per-class winners: " + ", ".join(
+    f"{c}->{w['impl']}" for c, w in sorted(winners.items())))
+assert winners, "no structure-class winners recorded"
 red = summary["balanced_cost_reduction_min"]
 print(f"skewed balanced-vs-window cost min {red:.2f}x")
 assert red >= 1.3, f"balanced scheduling floor regressed: {red}"

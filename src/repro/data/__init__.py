@@ -1,5 +1,37 @@
-"""Deterministic synthetic data pipelines (straggler-tolerant by design)."""
+"""Data pipelines: deterministic synthetic batches + real-matrix loaders.
 
+:mod:`repro.data.synthetic` generates straggler-tolerant LM batches;
+:mod:`repro.data.datasets` parses MatrixMarket / edge-list files and
+serves the vendored real-matrix sample set (tests/data/) that drives the
+conformance harness and the ``--datasets`` benchmarks.
+"""
+
+from .datasets import (
+    MatrixSample,
+    load_edgelist,
+    load_manifest,
+    load_mtx,
+    load_vendored,
+    loads_edgelist,
+    loads_mtx,
+    save_mtx,
+    vendored_dir,
+    vendored_names,
+)
 from .synthetic import SyntheticLMData, input_specs, make_batch
 
-__all__ = ["SyntheticLMData", "input_specs", "make_batch"]
+__all__ = [
+    "MatrixSample",
+    "SyntheticLMData",
+    "input_specs",
+    "load_edgelist",
+    "load_manifest",
+    "load_mtx",
+    "load_vendored",
+    "loads_edgelist",
+    "loads_mtx",
+    "make_batch",
+    "save_mtx",
+    "vendored_dir",
+    "vendored_names",
+]

@@ -75,7 +75,14 @@ _DEFAULT_CACHE_PATH = os.path.join(
 # size when the axis is swept — a v4 winner carries no pipeline depth and
 # must not satisfy an overlap-swept lookup, so v4 files (and older) are
 # discarded wholesale.
-SCHEMA_VERSION = 5
+# v6: the stats key gained the structure-taxonomy class
+# (repro.sparse.structure: banded/mesh/block/hub/uniform/dense) — two
+# matrices with the same coarse size/skew buckets but different structure
+# classes favour different winners (the real-matrix benchmarks record
+# per-class winners), so a v5 winner tuned without the class dimension
+# must not satisfy a class-aware lookup and v5 files (and older) are
+# discarded wholesale.
+SCHEMA_VERSION = 6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,8 +134,14 @@ def matrix_stats_key(fmt: MEBCRS, n: int, op: str, *, interpret: bool,
     statistic (p99/mean vectors-per-window, log2-bucketed) keys the
     balanced-vs-plain decision: a hub-heavy matrix and a uniform one with
     the same size/density land in different buckets, so the block-parallel
-    schedule is chosen per matrix *class* (DESIGN.md §11).
+    schedule is chosen per matrix *class* (DESIGN.md §11).  The structure-
+    taxonomy class (``cls...``, schema v6) sharpens that: real matrices
+    with identical coarse buckets but different structure (banded vs mesh
+    vs block-diagonal) get their own winners — the ``--datasets``
+    benchmarks show the winning impl differs per class.
     """
+    from repro.sparse.structure import classify_format
+
     w = fmt.num_windows
     nnzv = fmt.nnzv
     avg_vec = nnzv / max(w, 1)
@@ -139,6 +152,7 @@ def matrix_stats_key(fmt: MEBCRS, n: int, op: str, *, interpret: bool,
         f"w{_log2_bucket(w)}",
         f"vec{_log2_bucket(avg_vec)}",
         f"sk{_log2_bucket(window_skew(fmt))}",
+        f"cls{classify_format(fmt)}",
         f"n{_log2_bucket(n)}",
         f"dt{dt}",
         f"b{_log2_bucket(batch)}",

@@ -1,4 +1,4 @@
-"""Sparse data pipeline: synthetic graph generators and dataset presets."""
+"""Sparse data pipeline: graph generators, presets, structure taxonomy."""
 
 from .graphs import (
     DATASET_PRESETS,
@@ -8,12 +8,22 @@ from .graphs import (
     make_dataset,
     power_law_graph,
 )
+from .structure import (
+    STRUCTURE_CLASSES,
+    classify_format,
+    classify_structure,
+    structure_stats,
+)
 
 __all__ = [
     "DATASET_PRESETS",
     "GraphData",
+    "STRUCTURE_CLASSES",
+    "classify_format",
+    "classify_structure",
     "erdos_renyi_graph",
     "gcn_normalized",
     "make_dataset",
     "power_law_graph",
+    "structure_stats",
 ]

@@ -1,0 +1,196 @@
+"""Matrix structure taxonomy: feature extraction + class assignment.
+
+The paper evaluates across ~515 real matrices, and both cuTeSpMM and the
+ETH unstructured-SpMM study (PAPERS.md) observe the same thing we see in
+BENCH_spmm.json: *which* implementation wins is a function of the
+matrix's structure class, not its raw size.  A hub-row matrix wants the
+block-parallel balanced schedule; a banded or mesh matrix is already
+window-uniform and the window-parallel fused kernel wins on launch
+overhead; near-dense blocks favour deeper K-blocks.
+
+This module turns that observation into a small, deterministic taxonomy:
+
+  :func:`structure_stats`     COO triplets → feature dict (density, row-
+                              length CV, window skew, normalized p95
+                              bandwidth, band fill)
+  :func:`classify_structure`  feature dict → one of
+                              :data:`STRUCTURE_CLASSES` via documented
+                              threshold rules
+  :func:`classify_format`     the same, from an ME-BCRS format
+                              (memoized on the instance — the autotuner
+                              calls it per stats-key lookup)
+
+The class feeds two consumers: the autotuner's stats-bucket key (cache
+schema v6 — matrices of different classes never share a tuned winner)
+and the ``--datasets`` benchmark records, which report the winning impl
+*per class* so the BENCH artifacts map the taxonomy onto impl choice.
+
+All features are plain host-side numpy over the COO triplets — this is
+format-translation-time work, like :func:`repro.core.format.from_coo`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+__all__ = [
+    "STRUCTURE_CLASSES",
+    "structure_stats",
+    "classify_structure",
+    "classify_format",
+]
+
+# Every class the taxonomy can assign, roughly from most to least
+# structured.  ``empty`` and ``dense`` are the degenerate ends; the five
+# sparse classes mirror the vendored real-matrix set (tests/data/):
+#
+#   banded   tight diagonal band (tridiagonal/pentadiagonal chains,
+#            1-D chains, narrow-band FEM) — near-constant row lengths,
+#            p95 bandwidth a few elements
+#   mesh     local stencil couplings (2-D/3-D grid Laplacians): regular
+#            rows, moderate bandwidth (~ grid pitch), sparse *within*
+#            the band
+#   block    dense diagonal blocks (multi-body / circuit / supernodal
+#            matrices): moderate bandwidth but a mostly-*full* band
+#   hub      heavy-tailed row lengths (social/web/citation graphs,
+#            power-law degree distributions) — the regime the balanced
+#            schedule (DESIGN.md §11) exists for
+#   uniform  unstructured, near-uniform scatter (Erdős–Rényi-like)
+STRUCTURE_CLASSES: Tuple[str, ...] = (
+    "empty", "dense", "hub", "banded", "block", "mesh", "uniform")
+
+# Decision thresholds, exposed so docs/tests can state the rules rather
+# than reverse-engineer them.  Order of evaluation matters and is fixed
+# by :func:`classify_structure`.
+DENSE_DENSITY = 0.25        # density ≥ this → "dense"
+HUB_ROW_CV = 1.0            # row-length CV ≥ this → "hub"
+HUB_WINDOW_SKEW = 4.0       # or p99/mean window skew ≥ this → "hub"
+BANDED_RATIO = 0.03         # p95 |i−j| / max(m,k) ≤ this → "banded"
+BANDED_ABS = 4.0            # or p95 |i−j| ≤ this many elements → "banded"
+                            # (a tridiagonal is banded at any matrix size)
+LOCAL_RATIO = 0.30          # ≤ this → band-local ("block" or "mesh")
+BLOCK_FILL = 0.40           # band fill ≥ this within a local band → "block"
+
+
+def structure_stats(rows, cols, shape: Tuple[int, int],
+                    vector_size: int = 8) -> Dict[str, float]:
+    """Structure features of a COO matrix (host-side numpy).
+
+    Returns a dict with:
+
+      nnz, density        raw count and nnz / (m·k)
+      avg_row_len         nnz / m
+      row_cv              std/mean of per-row nonzero counts (0 for an
+                          empty matrix) — the ETH study's row-regularity
+                          axis
+      window_skew         p99/mean of nonzero-*vector* counts per
+                          ``vector_size``-row window (≥ 1.0), the same
+                          statistic :func:`repro.core.format.window_skew`
+                          computes on a built format — the autotuner's
+                          balanced-vs-plain axis
+      bandwidth           p95 of |i − j| in elements
+      bandwidth_ratio     the same normalized by max(m, k): 0 for a
+                          pure diagonal, → 1 for unstructured scatter
+      band_fill           nnz / band area at the p95 bandwidth, clipped
+                          to 1: how *full* the occupied band is (dense
+                          diagonal blocks ≈ 0.5+, stencils ≈ 0.2)
+      diag_frac           fraction of rows carrying a diagonal entry
+    """
+    m, k = int(shape[0]), int(shape[1])
+    if m <= 0 or k <= 0:
+        raise ValueError(f"invalid shape {shape!r}")
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    if rows.shape != cols.shape or rows.ndim != 1:
+        raise ValueError("rows/cols must be 1-D arrays of equal length")
+    nnz = int(rows.size)
+    stats: Dict[str, float] = {
+        "nnz": float(nnz),
+        "density": nnz / float(m * k),
+        "avg_row_len": nnz / float(m),
+    }
+    if nnz == 0:
+        stats.update(row_cv=0.0, window_skew=1.0, bandwidth=0.0,
+                     bandwidth_ratio=0.0, band_fill=0.0, diag_frac=0.0)
+        return stats
+
+    row_len = np.bincount(rows, minlength=m).astype(np.float64)
+    mean_len = row_len.mean()
+    stats["row_cv"] = float(row_len.std() / mean_len) if mean_len > 0 else 0.0
+
+    # nonzero vectors per window — the statistic that keys balanced-vs-
+    # plain in the autotuner; computed straight from COO so callers can
+    # classify before paying format translation
+    win = rows // vector_size
+    uniq_vec = np.unique(win * k + cols)
+    w = -(-m // vector_size)
+    vec_counts = np.bincount((uniq_vec // k).astype(np.int64),
+                             minlength=w).astype(np.float64)
+    vmean = uniq_vec.size / float(w)
+    stats["window_skew"] = float(
+        max(np.percentile(vec_counts, 99) / vmean, 1.0)) if vmean > 0 else 1.0
+
+    band = np.abs(rows - cols)
+    bw = float(np.percentile(band, 95))
+    stats["bandwidth"] = bw
+    stats["bandwidth_ratio"] = bw / float(max(m, k))
+    band_area = (2.0 * bw + 1.0) * min(m, k)
+    stats["band_fill"] = float(min(nnz / band_area, 1.0))
+    stats["diag_frac"] = float(
+        np.unique(rows[rows == cols]).size / min(m, k))
+    return stats
+
+
+def classify_structure(stats: Dict[str, float]) -> str:
+    """Assign one of :data:`STRUCTURE_CLASSES` from a feature dict.
+
+    Rules (first match wins — the thresholds are the module constants):
+
+      1. ``nnz == 0``                                        → ``empty``
+      2. ``density ≥ DENSE_DENSITY``                         → ``dense``
+      3. ``row_cv ≥ HUB_ROW_CV`` or
+         ``window_skew ≥ HUB_WINDOW_SKEW``                   → ``hub``
+      4. ``bandwidth_ratio ≤ BANDED_RATIO`` or
+         ``bandwidth ≤ BANDED_ABS`` elements                 → ``banded``
+      5. ``bandwidth_ratio ≤ LOCAL_RATIO`` and
+         ``band_fill ≥ BLOCK_FILL``                          → ``block``
+      6. ``bandwidth_ratio ≤ LOCAL_RATIO``                   → ``mesh``
+      7. otherwise                                           → ``uniform``
+    """
+    if stats["nnz"] == 0:
+        return "empty"
+    if stats["density"] >= DENSE_DENSITY:
+        return "dense"
+    if (stats["row_cv"] >= HUB_ROW_CV
+            or stats["window_skew"] >= HUB_WINDOW_SKEW):
+        return "hub"
+    if (stats["bandwidth_ratio"] <= BANDED_RATIO
+            or stats.get("bandwidth", np.inf) <= BANDED_ABS):
+        return "banded"
+    if stats["bandwidth_ratio"] <= LOCAL_RATIO:
+        return "block" if stats["band_fill"] >= BLOCK_FILL else "mesh"
+    return "uniform"
+
+
+def classify_format(fmt) -> str:
+    """Structure class of an ME-BCRS / blocked format (instance-memoized).
+
+    The autotuner calls this inside every ``matrix_stats_key`` build, so
+    the O(nnz) feature pass is paid once per format instance — the same
+    memoization contract as :meth:`repro.core.format.MEBCRS.transpose`.
+    Requires concrete (non-tracer) arrays, like all host-side format
+    work.
+    """
+    cached = getattr(fmt, "_structure_class", None)
+    if cached is not None:
+        return cached
+    from repro.core.format import to_coo
+
+    rows, cols, _ = to_coo(fmt)
+    cls = classify_structure(
+        structure_stats(rows, cols, fmt.shape,
+                        vector_size=fmt.vector_size))
+    object.__setattr__(fmt, "_structure_class", cls)
+    return cls

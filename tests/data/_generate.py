@@ -1,0 +1,236 @@
+"""Regenerate the vendored sample matrices (deterministic, seed below).
+
+The vendored set is a miniature of the paper's real-matrix evaluation:
+each file mimics one structure class observed in SuiteSparse / OGB data
+(banded FEM chains, grid-Laplacian meshes, supernodal block diagonals,
+power-law hub graphs, unstructured scatter) at dims <= 128 so the full
+conformance harness runs offline in seconds.  Full-size *actual*
+SuiteSparse matrices are listed in manifest.json as download-only
+entries for scripts/fetch_datasets.py.
+
+    PYTHONPATH=src python tests/data/_generate.py
+
+Rewrites every .mtx/.edges file in place and prints the structure class
+the taxonomy assigns each one (must match manifest.json).
+"""
+
+import pathlib
+import sys
+
+import numpy as np
+
+HERE = pathlib.Path(__file__).resolve().parent
+sys.path.insert(0, str(HERE.parents[1] / "src"))
+
+SEED = 20260809
+
+
+def write_coord(name, rows, cols, vals, shape, field="real",
+                symmetry="general", comment=""):
+    m, k = shape
+    lines = [f"%%MatrixMarket matrix coordinate {field} {symmetry}"]
+    lines += [f"% {c}" for c in comment.splitlines() if c]
+    lines.append(f"{m} {k} {len(rows)}")
+    for i, j, v in zip(rows, cols, vals):
+        if field == "pattern":
+            lines.append(f"{i + 1} {j + 1}")
+        elif field == "integer":
+            lines.append(f"{i + 1} {j + 1} {int(v)}")
+        else:
+            lines.append(f"{i + 1} {j + 1} {float(v):.6g}")
+    (HERE / name).write_text("\n".join(lines) + "\n")
+
+
+def write_array(name, dense, symmetry="general", comment=""):
+    m, k = dense.shape
+    lines = [f"%%MatrixMarket matrix array real {symmetry}"]
+    lines += [f"% {c}" for c in comment.splitlines() if c]
+    lines.append(f"{m} {k}")
+    if symmetry == "general":
+        for j in range(k):
+            for i in range(m):
+                lines.append(f"{dense[i, j]:.6g}")
+    else:  # lower triangle incl. diagonal, column-major
+        for j in range(k):
+            for i in range(j, m):
+                lines.append(f"{dense[i, j]:.6g}")
+    (HERE / name).write_text("\n".join(lines) + "\n")
+
+
+def main():
+    rng = np.random.default_rng(SEED)
+
+    # banded: symmetric tridiagonal chain (1-D Laplacian), lower triangle
+    n = 64
+    r = list(range(n)) + list(range(1, n))
+    c = list(range(n)) + list(range(n - 1))
+    v = [2.0] * n + [-1.0] * (n - 1)
+    write_coord("tridiag_64.mtx", r, c, v, (n, n), symmetry="symmetric",
+                comment="1-D Laplacian chain, symmetric storage")
+
+    # banded: general pentadiagonal
+    n = 96
+    r, c, v = [], [], []
+    for off in (-2, -1, 0, 1, 2):
+        for i in range(n):
+            j = i + off
+            if 0 <= j < n:
+                r.append(i)
+                c.append(j)
+                v.append(6.0 if off == 0 else -1.0 - 0.1 * abs(off))
+    write_coord("pentadiag_96.mtx", r, c, v, (n, n),
+                comment="pentadiagonal band, general storage")
+
+    # banded: skew-symmetric bidiagonal (zero diagonal by construction)
+    n = 64
+    sub = rng.uniform(0.5, 2.0, n - 1)
+    write_coord("skewband_64.mtx", list(range(1, n)), list(range(n - 1)),
+                sub, (n, n), symmetry="skew-symmetric",
+                comment="sub-diagonal only; expansion negates the mirror")
+
+    # mesh: 5-point Laplacian on a 10x10 grid, symmetric storage with an
+    # explicit full diagonal (the diagonal-heavy regression matrix)
+    g = 10
+    n = g * g
+    r, c, v = list(range(n)), list(range(n)), [4.0] * n
+    for node in range(n):
+        row, col = divmod(node, g)
+        if col > 0:
+            r.append(node)
+            c.append(node - 1)
+            v.append(-1.0)
+        if row > 0:
+            r.append(node)
+            c.append(node - g)
+            v.append(-1.0)
+    write_coord("mesh2d_10.mtx", r, c, v, (n, n), symmetry="symmetric",
+                comment="5-point 2-D grid Laplacian, full diagonal stored")
+
+    # mesh: 7-point stencil on a 4x4x4 grid, general storage
+    g = 4
+    n = g ** 3
+    r, c, v = [], [], []
+    for node in range(n):
+        x, rem = divmod(node, g * g)
+        y, z = divmod(rem, g)
+        r.append(node)
+        c.append(node)
+        v.append(6.0)
+        for other in ((x - 1, y, z), (x + 1, y, z), (x, y - 1, z),
+                      (x, y + 1, z), (x, y, z - 1), (x, y, z + 1)):
+            if all(0 <= q < g for q in other):
+                r.append(node)
+                c.append(other[0] * g * g + other[1] * g + other[2])
+                v.append(-1.0)
+    write_coord("mesh3d_4.mtx", r, c, v, (n, n),
+                comment="7-point 3-D grid stencil")
+
+    # block: dense diagonal blocks (supernodal/multi-body style)
+    for name, nblk, blk in (("blockdiag_96.mtx", 8, 12),
+                            ("blockdiag_96b.mtx", 16, 6)):
+        n = nblk * blk
+        fill = 0.85 if blk == 12 else 0.9
+        r, c, v = [], [], []
+        for b in range(nblk):
+            base = b * blk
+            for i in range(blk):
+                for j in range(blk):
+                    if i == j or rng.random() < fill:
+                        r.append(base + i)
+                        c.append(base + j)
+                        v.append(rng.uniform(-1, 1))
+        write_coord(name, r, c, v, (n, n),
+                    comment=f"{nblk} dense {blk}x{blk} diagonal blocks")
+
+    # hub: power-law degree pattern (a few very heavy rows)
+    n = 96
+    r, c = [], []
+    hubs = rng.choice(n, 4, replace=False)
+    for h in hubs:
+        for j in sorted(rng.choice(n, 60, replace=False)):
+            r.append(int(h))
+            c.append(int(j))
+    for i in range(n):
+        if i in hubs:
+            continue
+        for j in sorted(rng.choice(n, 2, replace=False)):
+            r.append(i)
+            c.append(int(j))
+    write_coord("hub_96.mtx", r, c, [1] * len(r), (n, n), field="pattern",
+                comment="4 hub rows of degree 60, tail degree 2")
+
+    n = 128
+    r, c, v = [], [], []
+    hubs = rng.choice(n, 5, replace=False)
+    for h in hubs:
+        for j in sorted(rng.choice(n, 70, replace=False)):
+            r.append(int(h))
+            c.append(int(j))
+            v.append(rng.uniform(0.1, 1.0))
+    for i in range(n):
+        if i in hubs:
+            continue
+        for j in sorted(rng.choice(n, 2, replace=False)):
+            r.append(i)
+            c.append(int(j))
+            v.append(rng.uniform(0.1, 1.0))
+    write_coord("hub_128.mtx", r, c, v, (n, n),
+                comment="5 hub rows of degree 70, weighted")
+
+    # uniform: unstructured integer scatter, constant row length
+    n = 80
+    r, c, v = [], [], []
+    for i in range(n):
+        for j in sorted(rng.choice(n, 6, replace=False)):
+            r.append(i)
+            c.append(int(j))
+            v.append(int(rng.integers(1, 10)))
+    write_coord("uniform_80.mtx", r, c, v, (n, n), field="integer",
+                comment="uniform scatter, 6 per row, integer weights")
+
+    # uniform: rectangular sparse (tall feature matrix)
+    m, k = 120, 40
+    r, c, v = [], [], []
+    for i in range(m):
+        for j in sorted(rng.choice(k, 4, replace=False)):
+            r.append(i)
+            c.append(int(j))
+            v.append(rng.uniform(-1, 1))
+    write_coord("rect_120x40.mtx", r, c, v, (m, k),
+                comment="tall rectangular scatter, 4 per row")
+
+    # dense: array-format rectangular with explicit zeros
+    dense = rng.uniform(-1, 1, (8, 6))
+    dense[rng.random((8, 6)) < 0.15] = 0.0
+    write_array("densearray_8x6.mtx", dense,
+                comment="array format, general, a few explicit zeros")
+
+    # dense: array-format symmetric
+    a = rng.uniform(-1, 1, (12, 12))
+    write_array("densesym_12.mtx", (a + a.T) / 2, symmetry="symmetric",
+                comment="array format, symmetric (lower triangle stored)")
+
+    # hub edge list (OGB-style): 3 hubs over a chain backbone
+    n = 100
+    lines = ["# toy OGB-style edge list: src dst weight",
+             f"# {n} nodes, 3 hubs over a chain backbone"]
+    for i in range(n - 1):
+        lines.append(f"{i} {i + 1} 1.0")
+    for h in (0, 37, 81):
+        for j in sorted(rng.choice(n, 45, replace=False)):
+            if j not in (h, h + 1):  # h -> h+1 already on the chain
+                lines.append(f"{h} {int(j)} {rng.uniform(0.1, 1.0):.3f}")
+    (HERE / "hubgraph_100.edges").write_text("\n".join(lines) + "\n")
+
+    # report the class the taxonomy assigns each file
+    from repro.data.datasets import load_edgelist, load_mtx
+
+    for path in sorted(HERE.glob("*.mtx")) + sorted(HERE.glob("*.edges")):
+        s = (load_edgelist(path) if path.suffix == ".edges"
+             else load_mtx(path))
+        print(f"{path.name:22s} {s.shape[0]:4d}x{s.shape[1]:<4d} "
+              f"nnz={s.nnz:5d}  -> {s.structure_class()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -367,7 +367,7 @@ def test_tuneconfig_roundtrip_and_stale_schema_discard(tmp_path):
             "k_blk": 8, "n_blk": 64, "median_ms": 1.0}}}, f)
     cache = AutotuneCache(path)
     assert cache.get("stale") is None
-    assert SCHEMA_VERSION == 5
+    assert SCHEMA_VERSION == 6
 
     cfg = TuneConfig(k_blk=8, n_blk=64, median_ms=0.5, split_blk=2,
                      precision="bf16", overlap_batches=2)
@@ -375,7 +375,7 @@ def test_tuneconfig_roundtrip_and_stale_schema_discard(tmp_path):
     assert AutotuneCache(path).get("k") == cfg
     with open(path) as f:
         raw = json.load(f)
-    assert raw["schema"] == 5
+    assert raw["schema"] == 6
     assert raw["configs"]["k"]["split_blk"] == 2
     assert raw["configs"]["k"]["precision"] == "bf16"
     assert raw["configs"]["k"]["overlap_batches"] == 2
